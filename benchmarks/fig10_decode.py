@@ -1,0 +1,34 @@
+"""Fig. 10: decode latency + energy of EVA vs baselines on LLaMA FC layers
+(batch = 1), including the headline speedups (11.17x over FIGLUT etc.).
+"""
+from __future__ import annotations
+
+from benchmarks.accel_model import model_decode_cost
+from repro.configs import get_config
+
+MODELS = ["llama2_7b", "llama3_8b"]
+BASELINES = ["SA", "ANT", "FIGNA", "FIGLUT"]
+PAPER = {"SA": 31.56, "ANT": 32.53, "FIGNA": 33.50, "FIGLUT": 11.17}
+PAPER_ENERGY = {"SA": 12.48, "ANT": 15.96, "FIGNA": 14.96, "FIGLUT": 7.17}
+
+
+def run(report):
+    rows = []
+    for m in MODELS:
+        cfg = get_config(m)
+        eva = model_decode_cost("EVA", cfg, batch=1, bits=2)
+        for b in BASELINES:
+            c = model_decode_cost(b, cfg, batch=1, bits=2)
+            sp = c.latency_s / eva.latency_s
+            ee = c.energy / eva.energy
+            rows.append((m, b, sp, ee))
+            tag = (f"speedup={sp:.2f};paper={PAPER[b]:.2f};"
+                   f"eff={ee:.2f};paper_eff={PAPER_ENERGY[b]:.2f}"
+                   if m == "llama2_7b" else f"speedup={sp:.2f};eff={ee:.2f}")
+            report(f"fig10/{m}/EVA_vs_{b}", c.latency_s * 1e6, tag)
+        # W-bit scaling (paper: W2 is 1.99x / 1.49x faster than W4 / W3)
+        for bits, paper in ((4, 1.99), (3, 1.49)):
+            cw = model_decode_cost("EVA", cfg, batch=1, bits=bits)
+            report(f"fig10/{m}/EVA_W2_vs_W{bits}", cw.latency_s * 1e6,
+                   f"ratio={cw.latency_s/eva.latency_s:.2f};paper={paper}")
+    return rows

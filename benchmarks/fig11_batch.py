@@ -1,0 +1,36 @@
+"""Fig. 11: batch scaling on LLaMA-2-7B.
+
+Paper's findings: (a) baselines' latency grows slowly below batch 8 (they
+were under-utilized anyway) while EVA-W2 grows ~linearly (it is already
+saturated); (b) past batch ~32 the workload turns GEMM-like and EVA's
+INT8 mode (EVA-A8W8) overtakes the VQ path.
+"""
+from __future__ import annotations
+
+from benchmarks.accel_model import model_decode_cost
+from repro.configs import get_config
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(report):
+    cfg = get_config("llama2_7b")
+    rows = []
+    cross = None
+    for b in BATCHES:
+        vq = model_decode_cost("EVA", cfg, batch=b, bits=2)
+        i8 = model_decode_cost("EVA-A8W8", cfg, batch=b)
+        sa = model_decode_cost("SA", cfg, batch=b)
+        rows.append((b, vq.latency_s, i8.latency_s, sa.latency_s))
+        if cross is None and i8.latency_s < vq.latency_s:
+            cross = b
+        report(f"fig11/batch{b}", vq.latency_s * 1e6,
+               f"int8_us={i8.latency_s*1e6:.1f};sa_us={sa.latency_s*1e6:.1f}")
+    report("fig11/crossover_batch", float(cross or -1),
+           "paper: VQ loses to INT8 past batch ~32")
+    # sub-linear growth of SA at small batch
+    sa1 = rows[0][3]
+    sa8 = rows[3][3]
+    report("fig11/sa_growth_1to8", sa8 / sa1,
+           "paper: ~1 (hidden by low utilization)")
+    return rows

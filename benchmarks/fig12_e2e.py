@@ -1,0 +1,49 @@
+"""Fig. 12/13 + Tbl. IX: end-to-end latency on real-dataset length
+distributions (prefill INT8 + decode VQ, per-phase accounting).
+
+Paper's findings: Dolly is decode-heavy (>80% of time in decode for all
+architectures) -> EVA e2e speedup 8.2x-24.49x; on prefill-heavy Arxiv the
+gain shrinks to 1.13x-2.28x; on decode-heavy GSM8K 5.01x-18.92x.
+"""
+from __future__ import annotations
+
+from benchmarks.accel_model import model_decode_cost, model_prefill_cost
+from repro.configs import get_config
+
+# Tbl. IX mean lengths
+DATASETS = {
+    "dolly": ("llama2_7b", 22.25, 246.87),
+    "arxiv": ("mixtral_8x22b", 8575.45, 227.08),
+    "gsm8k": ("mixtral_8x22b", 66.03, 126.79),
+}
+BASELINES = ["SA", "ANT", "FIGNA", "FIGLUT"]
+
+
+def _e2e(arch, cfg, in_len, out_len, bits=2):
+    pre = model_prefill_cost(arch, cfg, tokens=int(in_len), bits=bits)
+    dec = model_decode_cost(arch, cfg, batch=1, bits=bits)
+    total = pre.latency_s + dec.latency_s * out_len
+    return pre.latency_s, dec.latency_s * out_len, total
+
+
+def run(report):
+    rows = []
+    for ds, (model, in_len, out_len) in DATASETS.items():
+        cfg = get_config(model)
+        _, _, eva_total = _e2e("EVA", cfg, in_len, out_len)
+        pre_e, dec_e, _ = _e2e("EVA", cfg, in_len, out_len)
+        report(f"fig12/{ds}/EVA", eva_total * 1e6,
+               f"decode_share={dec_e/eva_total:.2f}")
+        sps = []
+        for b in BASELINES:
+            pre, dec, total = _e2e(b, cfg, in_len, out_len)
+            sp = total / eva_total
+            sps.append(sp)
+            rows.append((ds, b, sp, dec / total))
+            report(f"fig12/{ds}/{b}", total * 1e6,
+                   f"e2e_speedup={sp:.2f};decode_share={dec/total:.2f}")
+        expected = {"dolly": "8.2-24.5", "arxiv": "1.13-2.28",
+                    "gsm8k": "5.01-18.92"}[ds]
+        report(f"fig12/{ds}/speedup_range", 0.0,
+               f"got={min(sps):.2f}-{max(sps):.2f};paper={expected}")
+    return rows

@@ -1,0 +1,47 @@
+"""Fig. 14: spurious computations — codebook (centroid) utilization.
+
+Paper's analysis: with a uniform index distribution the expected number of
+utilized centroids is E[U] = 2^n (1 - (1 - 2^-n)^N); at 2^n=256, N=1024
+that's 98.2% (they observe 97.11%). We check both the formula and the
+empirical utilization of (a) uniform synthetic indices and (b) k-means
+fitted indices (the entropy argument: good VQ drives indices uniform).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vq import fit_vq, synthetic_vq
+
+
+def expected_utilization(n: int, N: int) -> float:
+    k = 2 ** n
+    return 1.0 - (1.0 - 1.0 / k) ** N
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for N in (256, 512, 1024, 4096):
+        th = expected_utilization(8, N)
+        vq = synthetic_vq(key, 512, N, d=8, n=8, C=1)
+        # utilization per v-row: fraction of centroids referenced by >=1
+        # output channel
+        idx = np.asarray(vq.idx[0])  # (V, N)
+        used = np.mean([len(np.unique(r)) / 256.0 for r in idx])
+        rows.append((N, th, used))
+        report(f"fig14/N{N}", 0.0,
+               f"theory={th:.4f};empirical={used:.4f}")
+    # fitted indices on structured weights stay near-uniform (entropy arg)
+    W = jax.random.normal(key, (256, 512)) * 0.2
+    vq = fit_vq(key, W, d=8, n=6, C=1, kmeans_iters=8, refine_rounds=0)
+    idx = np.asarray(vq.idx[0])
+    hist = np.bincount(idx.reshape(-1), minlength=64)
+    used_frac = (hist > 0).mean()
+    # normalized entropy of the index distribution
+    p = hist / hist.sum()
+    ent = -(p[p > 0] * np.log(p[p > 0])).sum() / np.log(64)
+    report("fig14/fitted_utilization", 0.0,
+           f"used={used_frac:.3f};norm_entropy={ent:.3f}(paper: ~uniform)")
+    return rows

@@ -1,0 +1,29 @@
+"""Fig. 8: design-space exploration over the number of Epilogue Units.
+
+Paper's finding: at 64 GB/s, 4 EUs (4x32 = 128 indices/cycle = DRAM rate)
+saturate — latency flattens beyond 4 EUs while energy keeps rising.
+"""
+from __future__ import annotations
+
+from benchmarks.accel_model import eva_cost, fc_layers
+from repro.configs import get_config
+
+EU_SWEEP = (1, 2, 4, 8, 16)
+
+
+def run(report):
+    cfg = get_config("llama2_7b")
+    layers = fc_layers(cfg)
+    rows = []
+    for eu in EU_SWEEP:
+        lat = sum(eva_cost(1, K, N, C=2, num_eu=eu).latency_s
+                  for (K, N) in layers)
+        en = sum(eva_cost(1, K, N, C=2, num_eu=eu).energy
+                 for (K, N) in layers)
+        rows.append((eu, lat, en))
+        report(f"fig8/eu{eu}", lat * 1e6, f"energy_uJ={en*1e6:.1f}")
+    # saturation check: 4 -> 8 EUs gains < 10%
+    l4 = dict((e, l) for e, l, _ in rows)[4]
+    l8 = dict((e, l) for e, l, _ in rows)[8]
+    report("fig8/saturation_4to8", 0.0, f"gain={l4/l8:.3f}(paper: ~1.0)")
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The analytic accelerator
+model (accel_model.py) mirrors the paper's simulator; `measured/*` rows
+are real wall-clock CPU executions of the JAX ops.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig8_dse, fig10_decode, fig11_batch, fig12_e2e, fig14_spurious,
+        measured, tbl_iii_vq_configs, tbl_v_accuracy_proxy,
+        tbl_viii_throughput, tbl_x_oc_advantage,
+    )
+
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.3f},{derived}", flush=True)
+
+    modules = [
+        ("tbl_iii", tbl_iii_vq_configs),
+        ("fig8", fig8_dse),
+        ("tbl_viii", tbl_viii_throughput),
+        ("fig10", fig10_decode),
+        ("fig11", fig11_batch),
+        ("fig12", fig12_e2e),
+        ("fig14", fig14_spurious),
+        ("tbl_x", tbl_x_oc_advantage),
+        ("tbl_v", tbl_v_accuracy_proxy),
+        ("measured", measured),
+    ]
+    failures = []
+    for name, mod in modules:
+        try:
+            mod.run(report)
+        except Exception as e:  # keep the harness running
+            failures.append((name, e))
+            report(f"{name}/ERROR", -1.0, f"{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Tbl. VIII: throughput / efficiency comparison at the accelerator level.
+
+Effective throughput = delivered GEMV ops / time for batch-1 decode of the
+LLaMA-2-7B FC stack. Paper: SA 15.75 GOPs (1.00x), ANT 0.97x, FIGNA 0.94x,
+FIGLUT 2.82x, EVA 31.64x.
+"""
+from __future__ import annotations
+
+from benchmarks.accel_model import fc_layers, model_decode_cost
+from repro.configs import get_config
+
+PAPER = {"SA": 1.00, "ANT": 0.97, "FIGNA": 0.94, "FIGLUT": 2.82, "EVA": 31.64}
+
+
+def run(report):
+    cfg = get_config("llama2_7b")
+    ops = 2 * sum(K * N for K, N in fc_layers(cfg)) * cfg.num_layers
+    rows = []
+    base = None
+    for arch in ["SA", "ANT", "FIGNA", "FIGLUT", "EVA"]:
+        c = model_decode_cost(arch, cfg, batch=1, bits=2)
+        gops = ops / c.latency_s / 1e9
+        base = base or gops
+        rows.append((arch, gops, gops / base))
+        report(f"tbl8/{arch}", c.latency_s * 1e6,
+               f"GOPs={gops:.2f};ratio={gops/base:.2f};paper={PAPER[arch]:.2f}")
+    return rows

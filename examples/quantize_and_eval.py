@@ -1,0 +1,19 @@
+"""Quantization-quality example (the paper's Tbl. V story): train a model,
+then compare FP32 / VQ-4bit / VQ-2bit / RTN-INT4 / RTN-INT2 perplexity.
+
+    PYTHONPATH=src python examples/quantize_and_eval.py
+"""
+from benchmarks.tbl_v_accuracy_proxy import run
+
+
+def main():
+    rows = run(lambda name, us, derived="": print(f"{name:24s} {derived}"))
+    print("\nsummary (ppl):")
+    for name, ppl in rows:
+        print(f"  {name:16s} {ppl:10.3f}")
+    print("\npaper's qualitative claim: 4-bit near-lossless for all methods;"
+          "\nat 2-bit, scalar RTN collapses while VQ stays usable.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Minitron-4B — width/depth-pruned Nemotron [arXiv:2407.14679; hf].
+
+32L d_model=3072 24H (GQA kv=8) d_ff=9216 vocab=256000.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256000,
+    rope_theta=10000.0,
+    vq_C=2,
+)
+
+SMOKE = ModelConfig(
+    name="minitron-4b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+    rope_theta=10000.0,
+    vq_C=2,
+)

@@ -1,0 +1,7 @@
+from repro.core.vq import VQWeight, fit_vq, dequantize, synthetic_vq, vq_specs
+from repro.core.ops import (
+    eva_matmul, dequant_matmul, fp_matmul, int8_matmul, vq_matmul,
+    compute_output_codebook, compute_collapse_ratio,
+)
+# repro.core.quantize imports repro.models (circular via this __init__);
+# import it directly: `from repro.core.quantize import quantize_params`.

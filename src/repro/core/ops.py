@@ -1,0 +1,209 @@
+"""Core matmul formulations for EVA.
+
+Four execution paths, all algebraically computing ``y = x @ W_hat``:
+
+  fp_matmul       : dense high-precision matmul (the FP16/BF16 baseline).
+  int8_matmul     : int8 x int8 -> int32 GEMM (the paper's prefill path).
+  dequant_matmul  : conventional VQ — reconstruct W_hat from (I, B, scale)
+                    then GEMV/GEMM (the paper's Fig. 1(b) baseline with all
+                    its memory traffic).
+  eva_matmul      : the paper's contribution — VQ-GEMM (O = X·B) followed by
+                    the conflict-free output-codebook lookup + add-only
+                    reduction epilogue (Fig. 1(c)).
+
+`impl` selects the pure-jnp expression ("jnp", used by distributed lowering
+and as the oracle) or the Pallas TPU kernel ("pallas", validated in
+interpret mode on CPU; compiled for TPU on real hardware).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vq import VQWeight
+
+# Default V-tile for the blocked epilogue. Mirrors the paper's v=32 tile
+# height (Tbl. II); on TPU this bounds the gathered intermediate to
+# (C, M, 32, N_tile) in VMEM.
+DEFAULT_BLOCK_V = 32
+
+
+def fp_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """Dense baseline: y = x @ w with fp32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(out_dtype)
+
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-slice int8 quantization: returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """Prefill path: dynamic per-token int8 activations x per-channel int8
+    weights -> int32 accumulate -> fp dequant. Mirrors the paper's INT8
+    systolic-array prefill mode (the TPU MXU is natively int8-capable)."""
+    out_dtype = out_dtype or x.dtype
+    xq, xs = quantize_int8(x, axis=-1)             # (..., K), (..., 1)
+    wq, ws = quantize_int8(w, axis=0)              # (K, N), (1, N)
+    acc = jax.lax.dot_general(
+        xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * xs * ws).astype(out_dtype)
+
+
+def dequant_matmul(x: jax.Array, vq: VQWeight, *, out_dtype=None) -> jax.Array:
+    """Conventional VQ baseline: on-the-fly reconstruct W_hat, then matmul.
+
+    Expressed so the weight reconstruction materializes (K, N) — exactly the
+    memory-traffic pattern EVA eliminates; used as the numerical oracle."""
+    from repro.core.vq import dequantize
+
+    out_dtype = out_dtype or x.dtype
+    w_hat = dequantize(vq).astype(jnp.float32)
+    return fp_matmul(x.astype(jnp.float32), w_hat, out_dtype=out_dtype)
+
+
+def compute_output_codebook(x: jax.Array, vq: VQWeight) -> jax.Array:
+    """Step 1 (VQ-GEMM): O = X·B.
+
+    x: (..., K) -> O: (C, M, V, 2^n) fp32 where M = prod(leading dims).
+    This is the GEMM the paper maps onto the 32x8 systolic array; cost is
+    M*K*2^n MACs, independent of N.
+    """
+    K = vq.K
+    M = x.size // K
+    X = x.reshape(M, vq.V, vq.d).astype(jnp.float32)
+    # (M, V, d) x (C, d, k) -> (C, M, V, k)
+    return jnp.einsum("mvd,cdk->cmvk", X, vq.codebooks.astype(jnp.float32))
+
+
+def eva_matmul(
+    x: jax.Array,
+    vq: VQWeight,
+    *,
+    block_v: Optional[int] = None,
+    out_dtype=None,
+    impl: str = "jnp",
+    interpret: bool = False,
+    flat_gather: bool = False,
+) -> jax.Array:
+    """EVA decode matmul: y = x @ W_hat via output-codebook lookup.
+
+      O = X·B                         (VQ-GEMM, MXU)
+      y[m,j] = s[j] * sum_c sum_v O[c,m,v, I[c,v,j]]   (epilogue, add-only)
+
+    Default epilogue is the DIRECT gather+reduce: under pjit the gathered
+    intermediate is sharded tile-sized (indices keep their V/N sharding —
+    an explicit V-block scan would force index all-gathers when V is
+    sharded) and XLA fuses gather into the reduction. `block_v` switches
+    to a scan-blocked epilogue for memory-constrained single-host runs
+    (mirrors the paper's v=32 tiling; the Pallas kernel always tiles).
+    """
+    if impl == "pallas":
+        from repro.kernels.fused_vq_matmul import ops as fused_ops
+
+        return fused_ops.fused_vq_matmul(x, vq, out_dtype=out_dtype, interpret=interpret)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    out_dtype = out_dtype or x.dtype
+    lead_shape = x.shape[:-1]
+    K = vq.K
+    M = x.size // K
+    V, N, C = vq.V, vq.N, vq.C
+
+    O = compute_output_codebook(x, vq)  # (C, M, V, k)
+    I = vq.idx.astype(jnp.int32)        # (C, V, N)
+
+    if block_v is None:
+        if flat_gather:
+            # §Perf variant: single-axis gather with precomputed flat
+            # indices — GSPMD partitions 1-D gathers with a replicated
+            # operand locally, where the 4-D take_along_axis reshards
+            # 3-tuple s32 gather indices across the mesh.
+            k = O.shape[-1]
+            v_iota = jnp.arange(V, dtype=jnp.int32)[None, :, None]
+            c_iota = jnp.arange(C, dtype=jnp.int32)[:, None, None]
+            flat = ((c_iota * V + v_iota) * k + I).reshape(-1)   # (C*V*N,)
+            O2 = O.transpose(1, 0, 2, 3).reshape(M, C * V * k)
+            g = jnp.take(O2, flat, axis=1)                       # (M, C*V*N)
+            acc = g.reshape(M, C, V, N).sum(axis=(1, 2))
+        else:
+            g = jnp.take_along_axis(O, I[:, None].astype(jnp.int32), axis=3)
+            acc = g.sum(axis=(0, 2))                             # (M, N)
+    else:
+        bv = min(block_v, V)
+        # pad V to a multiple of bv (index 0 with zeroed O rows)
+        rem = (-V) % bv
+        if rem:
+            O = jnp.pad(O, ((0, 0), (0, 0), (0, rem), (0, 0)))
+            I = jnp.pad(I, ((0, 0), (0, rem), (0, 0)))
+        nblk = O.shape[2] // bv
+        O_blk = O.reshape(C, M, nblk, bv, O.shape[-1]).transpose(2, 0, 1, 3, 4)
+        I_blk = I.reshape(C, nblk, bv, N).transpose(1, 0, 2, 3)
+
+        def body(acc, blk):
+            o_b, i_b = blk  # (C,M,bv,k), (C,bv,N)
+            g = jnp.take_along_axis(o_b, i_b[:, None].astype(jnp.int32), axis=3)
+            return acc + g.sum(axis=(0, 2)), None
+
+        acc0 = jnp.zeros((M, N), jnp.float32)
+        acc, _ = jax.lax.scan(body, acc0, (O_blk, I_blk))
+    y = acc * vq.scale[None, :].astype(jnp.float32)
+    return y.reshape(*lead_shape, N).astype(out_dtype)
+
+
+def vq_matmul(
+    x: jax.Array,
+    vq: VQWeight,
+    *,
+    mode: str = "eva",
+    out_dtype=None,
+    impl: str = "jnp",
+    interpret: bool = False,
+    flat_gather: bool = False,
+) -> jax.Array:
+    """Unified entry point used by the model layers."""
+    if mode == "eva":
+        return eva_matmul(x, vq, out_dtype=out_dtype, impl=impl,
+                          interpret=interpret, flat_gather=flat_gather)
+    if mode == "dequant":
+        return dequant_matmul(x, vq, out_dtype=out_dtype)
+    raise ValueError(f"unknown vq matmul mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Analytic op counts (used by tests + the accelerator model)
+# ---------------------------------------------------------------------------
+
+
+def gemv_macs(M: int, K: int, N: int) -> int:
+    return M * K * N
+
+
+def vq_gemm_macs(M: int, K: int, n: int, C: int, d: int) -> int:
+    """MACs of the VQ-GEMM stage: (M*K/d) rows x 2^n cols x d depth, per
+    codebook."""
+    return C * M * (K // d) * (2 ** n) * d
+
+
+def epilogue_adds(M: int, K: int, N: int, C: int, d: int) -> int:
+    """Add-only epilogue work: one add per (m, v, j, c)."""
+    return C * M * (K // d) * N
+
+
+def compute_collapse_ratio(N: int, n: int) -> float:
+    """Paper §III-B advantage 3: GEMV MACs / VQ-GEMM MACs = N / 2^n."""
+    return N / float(2 ** n)

@@ -1,0 +1,182 @@
+"""Model-level VQ quantization pass: converts a dense checkpoint into the
+EVA serving representation by replacing every eligible FC weight
+(attention projections, MLP/expert matrices) with a VQWeight
+(indices + additive codebooks + per-channel scale).
+
+Embeddings, lm_head, norms, routers, gates, convs and recurrence
+parameters stay high-precision — the same split as the paper (attention
+computation and non-FC parameters remain FP16).
+
+Three methods:
+  fit        — k-means additive VQ on real weights (small/smoke models)
+  synthetic  — random valid indices/codebooks (benchmarks, huge dry-runs)
+  specs      — ShapeDtypeStruct stand-ins (lowering only, no allocation)
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vq import VQWeight, fit_vq, synthetic_vq, vq_specs
+
+if TYPE_CHECKING:  # only for annotations — avoids a core<->models cycle
+    from repro.models.common import ModelConfig
+
+# param-tree path segments under which FC weights live
+_BLOCK_SEGMENTS = (
+    "layers", "pre_layers", "groups", "trail", "encoder", "decoder", "experts",
+)
+_MIN_DIM = 64  # don't quantize tiny matrices (per-head gates etc.)
+
+
+def _eligible(path: Tuple[str, ...], w) -> bool:
+    if not any(seg in path for seg in _BLOCK_SEGMENTS):
+        return False
+    if w.ndim < 2:
+        return False
+    K, N = w.shape[-2], w.shape[-1]
+    return K >= _MIN_DIM and N >= _MIN_DIM
+
+
+def _quantize_leaf(w, cfg: ModelConfig, method: str, key) -> VQWeight:
+    """w: (..., K, N) possibly with stacked leading dims."""
+    lead = w.shape[:-2]
+    K, N = w.shape[-2], w.shape[-1]
+    d, n, C = cfg.vq_d, cfg.vq_n, cfg.vq_C
+    if K % d != 0:
+        raise ValueError(f"K={K} not divisible by vq_d={d}")
+    V = K // d
+    k = 2 ** n
+    idx_dtype = jnp.uint8 if n <= 8 else jnp.int32
+
+    if method == "specs":
+        return VQWeight(
+            idx=jax.ShapeDtypeStruct((*lead, C, V, N), idx_dtype),
+            codebooks=jax.ShapeDtypeStruct((*lead, C, d, k), jnp.float32),
+            scale=jax.ShapeDtypeStruct((*lead, N), jnp.float32),
+            K=K, N=N, d=d, n=n,
+        )
+    if method == "synthetic":
+        kk = jax.random.fold_in(key, hash(str(w.shape)) % (2 ** 31))
+        base = synthetic_vq(kk, K, N, d=d, n=n, C=C)
+        def bcast(a):
+            return jnp.broadcast_to(a, (*lead, *a.shape)) if lead else a
+        # indices must differ per stacked layer — tile with per-layer perm-ish noise
+        if lead:
+            nlead = int(np.prod(lead))
+            keys = jax.random.split(kk, nlead)
+            idx = jax.vmap(
+                lambda k_: jax.random.randint(k_, (C, V, N), 0, k).astype(idx_dtype)
+            )(keys).reshape(*lead, C, V, N)
+            cbs = jax.vmap(
+                lambda k_: (jax.random.normal(k_, (C, d, k)) / np.sqrt(K * C))
+            )(keys).reshape(*lead, C, d, k)
+            return VQWeight(idx=idx, codebooks=cbs,
+                            scale=jnp.ones((*lead, N), jnp.float32),
+                            K=K, N=N, d=d, n=n)
+        return base
+    if method == "fit":
+        flat = w.reshape(-1, K, N)
+        keys = jax.random.split(key, flat.shape[0])
+
+        def fit_one(args):
+            kk, wi = args
+            return fit_vq(kk, wi, d=d, n=n, C=C, kmeans_iters=10, refine_rounds=0)
+
+        vqs = jax.lax.map(fit_one, (keys, flat))
+        def reshape_leaf(a):
+            return a.reshape(*lead, *a.shape[1:]) if lead else a[0]
+        return VQWeight(
+            idx=reshape_leaf(vqs.idx),
+            codebooks=reshape_leaf(vqs.codebooks),
+            scale=reshape_leaf(vqs.scale),
+            K=K, N=N, d=d, n=n,
+        )
+    raise ValueError(f"unknown method {method}")
+
+
+_BF16_MIN_SIZE = 65536  # large non-VQ serving leaves (emb/lm_head) -> bf16
+
+
+def _to_serving_dtype(leaf):
+    """Cast large fp32 dense leaves to bf16 for serving (embeddings and
+    lm_head stay unquantized per the paper but need not stay fp32)."""
+    if not hasattr(leaf, "dtype") or leaf.dtype != jnp.float32:
+        return leaf
+    if int(np.prod(leaf.shape)) < _BF16_MIN_SIZE:
+        return leaf
+    if isinstance(leaf, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(leaf.shape, jnp.bfloat16)
+    return leaf.astype(jnp.bfloat16)
+
+
+def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
+                    key: Optional[jax.Array] = None,
+                    serving_bf16: bool = True,
+                    quantize_lm_head: bool = False) -> Any:
+    """Walk the param tree and replace eligible {"w": ...} linears with
+    {"vq": VQWeight} (preserving biases). Remaining large dense leaves
+    (embeddings, lm_head) are cast to bf16 when `serving_bf16`.
+    `quantize_lm_head` additionally VQ-compresses the output projection —
+    beyond the paper (which keeps it FP16); worth ~0.3 GB/device of decode
+    traffic on qwen2-72b (EXPERIMENTS.md §Perf cell 1)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    extra = ("lm_head",) if quantize_lm_head else ()
+
+    def eligible(path, w):
+        if extra and any(seg in path for seg in extra):
+            return w.ndim >= 2 and w.shape[-2] >= _MIN_DIM \
+                and w.shape[-1] >= _MIN_DIM
+        return _eligible(path, w)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "w" in node and not isinstance(node["w"], VQWeight) \
+                    and eligible(path, node["w"]):
+                new = {kk: vv for kk, vv in node.items() if kk != "w"}
+                new["vq"] = _quantize_leaf(node["w"], cfg, method, key)
+                return new
+            return {kk: walk(vv, path + (kk,)) for kk, vv in node.items()}
+        if serving_bf16 and not isinstance(node, VQWeight):
+            return _to_serving_dtype(node)
+        return node
+
+    return walk(params, ())
+
+
+def count_vq_layers(params: Any) -> int:
+    n = 0
+
+    def walk(node):
+        nonlocal n
+        if isinstance(node, dict):
+            if "vq" in node:
+                n += 1
+            for v in node.values():
+                walk(v)
+
+    walk(params)
+    return n
+
+
+def compressed_model_bytes(params: Any) -> Tuple[int, int]:
+    """Returns (vq_bytes, dense_bytes_bf16_equivalent) over VQ'd leaves."""
+    vq_b, dense_b = 0, 0
+
+    def walk(node):
+        nonlocal vq_b, dense_b
+        if isinstance(node, dict):
+            if "vq" in node:
+                v: VQWeight = node["vq"]
+                lead = int(np.prod(v.idx.shape[:-3])) if v.idx.ndim > 3 else 1
+                vq_b += lead * v.compressed_bytes()
+                dense_b += lead * v.K * v.N * 2
+            for x in node.values():
+                if isinstance(x, dict):
+                    walk(x)
+
+    walk(params)
+    return vq_b, dense_b

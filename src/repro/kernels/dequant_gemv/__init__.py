@@ -1,0 +1,2 @@
+from repro.kernels.dequant_gemv.ops import dequant_gemv
+from repro.kernels.dequant_gemv.ref import dequant_gemv_ref

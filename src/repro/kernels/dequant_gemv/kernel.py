@@ -1,0 +1,78 @@
+"""Baseline Pallas kernel: conventional VQ decode (paper Fig. 1(b)).
+
+Reconstructs dequantized weight tiles in VMEM from (I, B) — the full
+'1-to-many' centroid gather EVA eliminates — then multiplies. Per output
+tile the kernel moves d x more gathered bytes than the OC lookup and
+spends M*K*N MACs instead of M*K*2^n; it exists to expose that contrast
+in the benchmarks (and as the memory-traffic-faithful baseline).
+
+Grid: (num_n_tiles, num_v_tiles), V innermost, output-stationary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_gemv_kernel(x_ref, cb_ref, i_ref, s_ref, y_ref, *, n_v_tiles: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    C = cb_ref.shape[0]
+    M, bv, d = x_ref.shape
+    bn = i_ref.shape[2]
+
+    idx = i_ref[...].astype(jnp.int32)          # (C, bv, bn)
+    # centroid gather: w[v, j, :] = sum_c cb[c, idx[c,v,j], :]
+    w = jnp.zeros((bv, bn, d), jnp.float32)
+    for c in range(C):
+        w = w + jnp.take(cb_ref[c].astype(jnp.float32), idx[c], axis=0)
+    w = w.transpose(0, 2, 1).reshape(bv * d, bn)  # (bv*d, bn)
+    x = x_ref[...].astype(jnp.float32).reshape(M, bv * d)
+    y_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(v == n_v_tiles - 1)
+    def _scale():
+        y_ref[...] *= s_ref[...][None, :].astype(jnp.float32)
+
+
+def dequant_gemv_pallas(
+    x: jax.Array,          # (M, V, d)
+    codebooks: jax.Array,  # (C, k, d)  NOTE: centroid-major layout
+    I: jax.Array,          # (C, V, N) int32
+    scale: jax.Array,      # (N,)
+    *,
+    block_v: int = 32,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, V, d = x.shape
+    C, k, d2 = codebooks.shape
+    N = I.shape[-1]
+    assert d == d2 and I.shape[:2] == (C, V)
+    assert V % block_v == 0 and N % block_n == 0
+    n_v_tiles = V // block_v
+    grid = (N // block_n, n_v_tiles)
+
+    kernel = functools.partial(_dequant_gemv_kernel, n_v_tiles=n_v_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, block_v, d), lambda n, v: (0, v, 0)),
+            pl.BlockSpec((C, k, d), lambda n, v: (0, 0, 0)),
+            pl.BlockSpec((C, block_v, block_n), lambda n, v: (0, v, n)),
+            pl.BlockSpec((block_n,), lambda n, v: (n,)),
+        ],
+        out_specs=pl.BlockSpec((M, block_n), lambda n, v: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, codebooks, I, scale)

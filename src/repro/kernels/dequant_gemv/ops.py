@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the dequant-GEMV baseline kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vq import VQWeight
+from repro.kernels.dequant_gemv.kernel import dequant_gemv_pallas
+from repro.kernels.dequant_gemv.ref import dequant_gemv_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_n", "interpret", "use_pallas", "out_dtype")
+)
+def dequant_gemv(
+    x: jax.Array,
+    vq: VQWeight,
+    *,
+    block_v: int = 32,
+    block_n: int = 512,
+    interpret: bool = False,
+    use_pallas: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K, N, V, d, C = vq.K, vq.N, vq.V, vq.d, vq.C
+    M = x.size // K
+    X = x.reshape(M, V, d).astype(jnp.float32)
+    cb = vq.codebooks.transpose(0, 2, 1).astype(jnp.float32)  # (C, k, d)
+    I = vq.idx.astype(jnp.int32)
+    scale = vq.scale.astype(jnp.float32)
+
+    if not use_pallas:
+        y = dequant_gemv_ref(X, cb, I, scale)
+        return y.reshape(*lead, N).astype(out_dtype)
+
+    bv = min(block_v, V)
+    bn = min(block_n, N)
+    pad_v = (-V) % bv
+    pad_n = (-N) % bn
+    if pad_v:
+        X = jnp.pad(X, ((0, 0), (0, pad_v), (0, 0)))
+        I = jnp.pad(I, ((0, 0), (0, pad_v), (0, 0)))
+    if pad_n:
+        I = jnp.pad(I, ((0, 0), (0, 0), (0, pad_n)))
+        scale = jnp.pad(scale, (0, pad_n))
+    y = dequant_gemv_pallas(X, cb, I, scale, block_v=bv, block_n=bn, interpret=interpret)
+    if pad_n:
+        y = y[:, :N]
+    return y.reshape(*lead, N).astype(out_dtype)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the conventional-VQ dequant GEMV baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_gemv_ref(
+    x: jax.Array,          # (M, V, d)
+    codebooks: jax.Array,  # (C, k, d)
+    I: jax.Array,          # (C, V, N)
+    scale: jax.Array,      # (N,)
+) -> jax.Array:
+    M, V, d = x.shape
+    N = I.shape[-1]
+    cents = jax.vmap(lambda cb, idx: jnp.take(cb, idx, axis=0))(
+        codebooks.astype(jnp.float32), I.astype(jnp.int32)
+    )  # (C, V, N, d)
+    w = cents.sum(axis=0).transpose(0, 2, 1).reshape(V * d, N)
+    y = x.astype(jnp.float32).reshape(M, V * d) @ w
+    return y * scale[None, :].astype(jnp.float32)

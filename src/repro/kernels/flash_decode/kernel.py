@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for single-token decode attention over a long KV
+cache (flash-decoding): the cache is streamed HBM->VMEM in S-blocks with
+an online-softmax accumulator held in VMEM — the second perf-critical
+decode op next to the EVA matmul (at 32k context the cache read dominates
+the decode step; see EXPERIMENTS.md §Roofline).
+
+GQA layout: q (B, H, hd), cache (B, S, Hk, hd), groups g = H // Hk.
+Grid: (B, num_s_blocks) with S innermost; per step the kernel computes
+scores for one cache block against all heads and folds them into the
+(m, l, acc) online-softmax state in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, n_s_blocks: int,
+                         block_s: int):
+    s_blk = pl.program_id(1)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (H, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bs, Hk, hd)
+    v = v_ref[0].astype(jnp.float32)                  # (bs, Hk, hd)
+    H, hd = q.shape
+    bs, Hk, _ = k.shape
+    g = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(Hk, g, hd)
+    s = jnp.einsum("kgd,skd->kgs", qg, k) * scale     # (Hk, g, bs)
+    pos = s_blk * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, -1e30)
+
+    m_prev = m_scr[...]                               # (Hk, g)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[..., None]
+                    + jnp.einsum("kgs,skd->kgd", p, v))
+    m_scr[...] = m_new
+
+    @pl.when(s_blk == n_s_blocks - 1)
+    def _finalize():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = o.reshape(H, hd).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(
+    q: jax.Array,        # (B, H, hd)
+    k: jax.Array,        # (B, S, Hk, hd)
+    v: jax.Array,        # (B, S, Hk, hd)
+    lengths: jax.Array,  # (B,) int32 valid cache lengths
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    _, S, Hk, _ = k.shape
+    assert H % Hk == 0 and S % block_s == 0, (H, Hk, S, block_s)
+    g = H // Hk
+    n_s_blocks = S // block_s
+    grid = (B, n_s_blocks)
+
+    kernel = functools.partial(_flash_decode_kernel,
+                               n_s_blocks=n_s_blocks, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, Hk, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_s, Hk, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hk, g), jnp.float32),
+            pltpu.VMEM((Hk, g), jnp.float32),
+            pltpu.VMEM((Hk, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)

@@ -1,0 +1,38 @@
+"""Jit'd wrapper for the flash-decode kernel (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret", "use_pallas"))
+def flash_decode(
+    q: jax.Array,        # (B, H, hd) or (B, 1, H, hd)
+    k: jax.Array,        # (B, S, Hk, hd)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+    use_pallas: bool = True,
+) -> jax.Array:
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    if not use_pallas:
+        o = flash_decode_ref(q, k, v, lengths)
+    else:
+        B, S = k.shape[0], k.shape[1]
+        bs = min(block_s, S)
+        pad = (-S) % bs
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        o = flash_decode_pallas(q, k, v, lengths.astype(jnp.int32),
+                                block_s=bs, interpret=interpret)
+    return o[:, None] if squeeze else o

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-decode kernel (plain masked softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k, v, lengths) -> jax.Array:
+    """q (B,H,hd), k/v (B,S,Hk,hd), lengths (B,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    g = H // Hk
+    qg = q.reshape(B, Hk, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.fused_vq_matmul.ops import fused_vq_matmul
+from repro.kernels.fused_vq_matmul.ref import fused_vq_matmul_ref

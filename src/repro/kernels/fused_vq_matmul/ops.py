@@ -1,0 +1,78 @@
+"""Jit'd wrapper for the fused EVA matmul kernel.
+
+Accepts a VQWeight and activations of any leading shape; handles padding,
+M-tiling (to bound the VMEM OC scratch), and dtype conversion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vq import VQWeight
+from repro.kernels.fused_vq_matmul.kernel import fused_vq_matmul_pallas
+from repro.kernels.fused_vq_matmul.ref import fused_vq_matmul_ref
+
+# Cap the OC scratch at ~8 MB fp32 (C*M_tile*V*256*4 bytes).
+_MAX_OC_BYTES = 8 * 1024 * 1024
+
+
+def _m_tile(C: int, V: int, k: int) -> int:
+    per_m = C * V * k * 4
+    return max(1, _MAX_OC_BYTES // max(per_m, 1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_n", "interpret", "use_pallas", "out_dtype")
+)
+def fused_vq_matmul(
+    x: jax.Array,
+    vq: VQWeight,
+    *,
+    block_v: int = 32,
+    block_n: int = 512,
+    interpret: bool = False,
+    use_pallas: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K, N, V, d, C = vq.K, vq.N, vq.V, vq.d, vq.C
+    k = vq.codebooks.shape[-1]
+    M = x.size // K
+    X = x.reshape(M, V, d).astype(jnp.float32)
+    I = vq.idx.astype(jnp.int32)
+    scale = vq.scale.astype(jnp.float32)
+
+    if not use_pallas:
+        y = fused_vq_matmul_ref(X, vq.codebooks, I, scale)
+        return y.reshape(*lead, N).astype(out_dtype)
+
+    bv = min(block_v, V)
+    bn = min(block_n, N)
+    pad_v = (-V) % bv
+    pad_n = (-N) % bn
+    if pad_v:
+        X = jnp.pad(X, ((0, 0), (0, pad_v), (0, 0)))
+        I = jnp.pad(I, ((0, 0), (0, pad_v), (0, 0)))
+    if pad_n:
+        I = jnp.pad(I, ((0, 0), (0, 0), (0, pad_n)))
+        scale = jnp.pad(scale, (0, pad_n))
+
+    mt = _m_tile(C, X.shape[1], k)
+    outs = []
+    for m0 in range(0, M, mt):
+        m1 = min(m0 + mt, M)
+        xm = X[m0:m1]
+        pad_m = 0
+        outs.append(
+            fused_vq_matmul_pallas(
+                xm, vq.codebooks.astype(jnp.float32), I, scale,
+                block_v=bv, block_n=bn, interpret=interpret,
+            )
+        )
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    if pad_n:
+        y = y[:, :N]
+    return y.reshape(*lead, N).astype(out_dtype)

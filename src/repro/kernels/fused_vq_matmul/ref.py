@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused EVA matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_vq_matmul_ref(
+    x: jax.Array,          # (M, V, d)
+    codebooks: jax.Array,  # (C, d, k)
+    I: jax.Array,          # (C, V, N)
+    scale: jax.Array,      # (N,)
+) -> jax.Array:
+    O = jnp.einsum(
+        "mvd,cdk->cmvk", x.astype(jnp.float32), codebooks.astype(jnp.float32)
+    )
+    g = jnp.take_along_axis(O, I[:, None, :, :].astype(jnp.int32), axis=3)
+    return g.sum(axis=(0, 2)) * scale[None, :].astype(jnp.float32)

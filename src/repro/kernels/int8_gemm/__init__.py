@@ -1,0 +1,2 @@
+from repro.kernels.int8_gemm.ops import int8_matmul_kernel
+from repro.kernels.int8_gemm.ref import int8_gemm_ref

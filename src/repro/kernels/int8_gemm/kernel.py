@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the prefill path: int8 x int8 -> int32 GEMM with
+per-token / per-channel dequant scales.
+
+This is the paper's "INT8 prefill" mode of the reconfigurable PE array
+(§IV-B) expressed TPU-natively: the MXU is int8-capable, so no PE
+decomposition trick is needed — int8 dot_general with int32 accumulation
+IS the reconfigured mode.
+
+Grid: (num_m_tiles, num_n_tiles, num_k_tiles), K innermost; int32
+accumulator held in VMEM scratch, scales applied at the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_gemm_kernel(x_ref, w_ref, xs_ref, ws_ref, y_ref, acc_scr, *, n_k_tiles: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(kk == n_k_tiles - 1)
+    def _dequant():
+        y_ref[...] = (
+            acc_scr[...].astype(jnp.float32)
+            * xs_ref[...].astype(jnp.float32)
+            * ws_ref[...].astype(jnp.float32)
+        )
+
+
+def int8_gemm_pallas(
+    xq: jax.Array,   # (M, K) int8
+    wq: jax.Array,   # (K, N) int8
+    xs: jax.Array,   # (M, 1) fp32
+    ws: jax.Array,   # (1, N) fp32
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = xq.shape
+    K2, N = wq.shape
+    assert K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k_tiles = K // block_k
+    grid = (M // block_m, N // block_n, n_k_tiles)
+
+    kernel = functools.partial(_int8_gemm_kernel, n_k_tiles=n_k_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, kk: (m, kk)),
+            pl.BlockSpec((block_k, block_n), lambda m, n, kk: (kk, n)),
+            pl.BlockSpec((block_m, 1), lambda m, n, kk: (m, 0)),
+            pl.BlockSpec((1, block_n), lambda m, n, kk: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, kk: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq, xs, ws)

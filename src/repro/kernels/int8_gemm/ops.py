@@ -1,0 +1,53 @@
+"""Jit'd wrapper: quantize activations/weights and run the int8 GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ops import quantize_int8
+from repro.kernels.int8_gemm.kernel import int8_gemm_pallas
+from repro.kernels.int8_gemm.ref import int8_gemm_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "use_pallas", "out_dtype"),
+)
+def int8_matmul_kernel(
+    x: jax.Array,   # (..., K) float
+    w: jax.Array,   # (K, N) float
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+    use_pallas: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    M = x.size // K
+    xq, xs = quantize_int8(x.reshape(M, K), axis=-1)
+    wq, ws = quantize_int8(w, axis=0)
+
+    if not use_pallas:
+        y = int8_gemm_ref(xq, wq, xs, ws)
+        return y.reshape(*lead, N).astype(out_dtype)
+
+    bm = min(block_m, max(8, M))
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        xq = jnp.pad(xq, ((0, pm), (0, pk)))
+        xs = jnp.pad(xs, ((0, pm), (0, 0)))
+    if pk or pn:
+        wq = jnp.pad(wq, ((0, pk), (0, pn)))
+        ws = jnp.pad(ws, ((0, 0), (0, pn)))
+    y = int8_gemm_pallas(xq, wq, xs, ws, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    y = y[:M, :N]
+    return y.reshape(*lead, N).astype(out_dtype)

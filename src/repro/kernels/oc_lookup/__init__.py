@@ -1,0 +1,2 @@
+from repro.kernels.oc_lookup.ops import oc_lookup
+from repro.kernels.oc_lookup.ref import oc_lookup_ref

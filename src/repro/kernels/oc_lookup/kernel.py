@@ -1,0 +1,73 @@
+"""Pallas TPU kernel for EVA Step 2: conflict-free output-codebook lookup
+with add-only reduction (the paper's Epilogue Unit, Fig. 6).
+
+  y[m, j] = scale[j] * sum_c sum_v O[c, m, v, I[c, v, j]]
+
+TPU mapping of the paper's bank argument: the OC tile (C, M, bv, 2^n) is
+VMEM-resident with the 2^n(=256) table axis on lanes; each sublane row `v`
+owns its own table — the analogue of "one bank per OC row". The gather per
+output tile is `take_along_axis` along the table axis and the reduction is
+a pure add tree (no multipliers except the final per-channel scale, exactly
+the paper's EU).
+
+Grid: (num_n_tiles, num_v_tiles) with V innermost so the (M, bn) output
+block stays resident in VMEM across the V accumulation (output-stationary,
+matching Fig. 4's stationary output tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _oc_lookup_kernel(o_ref, i_ref, s_ref, y_ref, *, n_v_tiles: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    o = o_ref[...]                          # (C, M, bv, k) fp32
+    idx = i_ref[...].astype(jnp.int32)      # (C, bv, bn)
+    g = jnp.take_along_axis(o, idx[:, None, :, :], axis=3)  # (C, M, bv, bn)
+    y_ref[...] += g.sum(axis=(0, 2))        # add-only reduction
+
+    @pl.when(v == n_v_tiles - 1)
+    def _scale():
+        y_ref[...] *= s_ref[...][None, :].astype(jnp.float32)
+
+
+def oc_lookup_pallas(
+    O: jax.Array,        # (C, M, V, k) fp32
+    I: jax.Array,        # (C, V, N) int32
+    scale: jax.Array,    # (N,) fp32
+    *,
+    block_v: int = 32,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (M, N) fp32. V % block_v == 0 and N % block_n == 0
+    (wrapper pads)."""
+    C, M, V, k = O.shape
+    C2, V2, N = I.shape
+    assert (C, V) == (C2, V2), ((C, V), (C2, V2))
+    assert V % block_v == 0 and N % block_n == 0, (V, block_v, N, block_n)
+    n_v_tiles = V // block_v
+    grid = (N // block_n, n_v_tiles)
+
+    kernel = functools.partial(_oc_lookup_kernel, n_v_tiles=n_v_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, M, block_v, k), lambda n, v: (0, 0, v, 0)),
+            pl.BlockSpec((C, block_v, block_n), lambda n, v: (0, v, n)),
+            pl.BlockSpec((block_n,), lambda n, v: (n,)),
+        ],
+        out_specs=pl.BlockSpec((M, block_n), lambda n, v: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(O, I, scale)

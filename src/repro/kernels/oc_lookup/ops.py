@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the OC-lookup kernel (padding + dtype handling)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.oc_lookup.kernel import oc_lookup_pallas
+from repro.kernels.oc_lookup.ref import oc_lookup_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_n", "interpret", "use_pallas")
+)
+def oc_lookup(
+    O: jax.Array,
+    I: jax.Array,
+    scale: jax.Array,
+    *,
+    block_v: int = 32,
+    block_n: int = 512,
+    interpret: bool = False,
+    use_pallas: bool = True,
+) -> jax.Array:
+    C, M, V, k = O.shape
+    N = I.shape[-1]
+    I = I.astype(jnp.int32)
+    scale = scale.astype(jnp.float32)
+    if not use_pallas:
+        return oc_lookup_ref(O, I, scale)
+
+    bv = min(block_v, V)
+    bn = min(block_n, N)
+    pad_v = (-V) % bv
+    pad_n = (-N) % bn
+    if pad_v:
+        # padded rows gather index 0 from zeroed O rows -> contribute 0
+        O = jnp.pad(O, ((0, 0), (0, 0), (0, pad_v), (0, 0)))
+        I = jnp.pad(I, ((0, 0), (0, pad_v), (0, 0)))
+    if pad_n:
+        I = jnp.pad(I, ((0, 0), (0, 0), (0, pad_n)))
+        scale = jnp.pad(scale, (0, pad_n))
+    y = oc_lookup_pallas(O, I, scale, block_v=bv, block_n=bn, interpret=interpret)
+    if pad_n:
+        y = y[:, :N]
+    return y

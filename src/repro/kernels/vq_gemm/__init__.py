@@ -1,0 +1,2 @@
+from repro.kernels.vq_gemm.ops import vq_gemm
+from repro.kernels.vq_gemm.ref import vq_gemm_ref

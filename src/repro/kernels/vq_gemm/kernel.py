@@ -1,0 +1,57 @@
+"""Pallas TPU kernel for EVA Step 1 (VQ-GEMM): O = X · B.
+
+Maps the paper's 32x8 FP16 systolic-array VQ-GEMM onto the MXU:
+the (M·V, d) reshaped activations multiply the (d, 2^n) codebook.
+`d` (=8) is far below the MXU's native 128-deep contraction, so on real
+hardware this kernel folds the codebook axis C and an M·V tile into the
+matmul to keep the MXU busy; the fused kernel (fused_vq_matmul) goes
+further and never writes O to HBM.
+
+Grid: (C, num_mv_tiles). Per step:
+  x_tile (bmv, d)   — streamed (same tile revisited per codebook)
+  b_tile (d, k)     — codebook c, stationary across mv tiles
+  o_tile (bmv, k)   — written once
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vq_gemm_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (bmv, d)
+    b = b_ref[0].astype(jnp.float32)            # (d, k)
+    o_ref[0] = jax.lax.dot_general(
+        x, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def vq_gemm_pallas(
+    x_flat: jax.Array,       # (MV, d)  activations reshaped to vectors
+    codebooks: jax.Array,    # (C, d, k)
+    *,
+    block_mv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns O (C, MV, k) fp32. MV must be a multiple of block_mv
+    (wrapper pads)."""
+    MV, d = x_flat.shape
+    C, d2, k = codebooks.shape
+    assert d == d2, (d, d2)
+    assert MV % block_mv == 0, (MV, block_mv)
+    grid = (C, MV // block_mv)
+
+    return pl.pallas_call(
+        _vq_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_mv, d), lambda c, m: (m, 0)),
+            pl.BlockSpec((1, d, k), lambda c, m: (c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_mv, k), lambda c, m: (c, m, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, MV, k), jnp.float32),
+        interpret=interpret,
+    )(x_flat, codebooks)

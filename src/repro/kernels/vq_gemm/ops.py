@@ -1,0 +1,40 @@
+"""Jit'd wrapper for the VQ-GEMM kernel (handles padding + reshape)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vq_gemm.kernel import vq_gemm_pallas
+from repro.kernels.vq_gemm.ref import vq_gemm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_mv", "interpret", "use_pallas"))
+def vq_gemm(
+    x: jax.Array,            # (..., K)
+    codebooks: jax.Array,    # (C, d, k)
+    *,
+    block_mv: int = 256,
+    interpret: bool = False,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Compute the output codebook O (C, M, V, k) for activations x."""
+    C, d, k = codebooks.shape
+    K = x.shape[-1]
+    assert K % d == 0
+    V = K // d
+    M = x.size // K
+    x_flat = x.reshape(M * V, d)
+
+    if not use_pallas:
+        O = vq_gemm_ref(x_flat, codebooks)
+    else:
+        MV = M * V
+        pad = (-MV) % block_mv
+        if pad:
+            x_flat = jnp.pad(x_flat, ((0, pad), (0, 0)))
+        O = vq_gemm_pallas(x_flat, codebooks, block_mv=block_mv, interpret=interpret)
+        if pad:
+            O = O[:, :MV]
+    return O.reshape(C, M, V, k)

@@ -1,0 +1,3 @@
+"""Launch entry points: mesh construction, sharded step builders, the
+fault-tolerant training driver, the serving driver, and the multi-pod
+dry-run harness (python -m repro.launch.dryrun)."""

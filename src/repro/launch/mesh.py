@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod:  (data=16, model=16)           = 256 chips (one v5e pod slice)
+Multi pod:   (pod=2, data=16, model=16)    = 512 chips
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: Optional[int] = None) -> Mesh:
+    """Mesh over whatever devices exist locally (tests)."""
+    n = len(jax.devices())
+    data = data if data is not None else n // model
+    return jax.make_mesh((data, model), ("data", "model"))

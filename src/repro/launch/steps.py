@@ -1,0 +1,176 @@
+"""Step builders shared by the training driver, the serving driver and the
+multi-pod dry-run: given (model, mesh) produce the jit-wrapped train /
+prefill / decode steps with full in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.api import Model
+from repro.models.common import RunConfig
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.runtime import sharding as shd
+
+
+# ---------------------------------------------------------------- training
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, rc: RunConfig,
+                    *, total_steps: int = 100000, warmup: int = 1000,
+                    accum_steps: int = 1):
+    """Sharded train step; `accum_steps > 1` splits the batch into
+    microbatches scanned sequentially with gradient accumulation — the
+    per-microbatch backward's gradient psums overlap the next
+    microbatch's compute under XLA's latency-hiding scheduler, and the
+    activation peak shrinks by the accumulation factor."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss_fn(p, b):
+            return model.loss(p, b, rc)
+
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                 *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, g0), micro)
+            loss = loss / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+
+        lr_scale = warmup_cosine(opt_state.step, warmup_steps=warmup,
+                                 total_steps=total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale
+        )
+        metrics = {"loss": loss, "gnorm": gnorm,
+                   "lr_scale": jnp.asarray(lr_scale, jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_shardings(model: Model, mesh: Mesh, params, opt_state, batch):
+    pspec = shd.param_pspecs(params, mesh)
+    mspec = shd.opt_pspecs(pspec, params, mesh, zero1=True)
+    opt_spec = AdamWState(
+        step=P(),
+        m=mspec,
+        v=mspec,
+        master=(mspec if opt_state.master is not None else None),
+    )
+    bspec = shd.batch_pspecs(batch, mesh)
+    metr_spec = {"loss": P(), "gnorm": P(), "lr_scale": P()}
+    return (pspec, opt_spec, bspec), (pspec, opt_spec, metr_spec)
+
+
+def lower_train_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
+                     rc: Optional[RunConfig] = None,
+                     opt_cfg: Optional[AdamWConfig] = None):
+    """Lower (but don't run) the sharded train step from ShapeDtypeStructs."""
+    rc = rc or RunConfig(mode="train", remat=True)
+    opt_cfg = opt_cfg or AdamWConfig()
+    param_specs = model.param_specs()
+    opt_specs = jax.eval_shape(
+        functools.partial(adamw_init, cfg=opt_cfg), param_specs
+    )
+    step = make_train_step(model, opt_cfg, rc)
+    in_shardings, out_shardings = train_shardings(
+        model, mesh, param_specs, opt_specs, specs
+    )
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=shd.to_named(in_shardings, mesh),
+            out_shardings=shd.to_named(out_shardings, mesh),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(param_specs, opt_specs, specs)
+    return lowered
+
+
+# ----------------------------------------------------------------- serving
+
+
+def make_prefill_step(model: Model, rc: RunConfig):
+    def prefill_step(params, batch):
+        rc_p = rc.replace(mode="prefill")
+        logits, caches = model.forward(params, batch, rc_p)
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def lower_prefill_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
+                       rc: Optional[RunConfig] = None, *,
+                       quantized: bool = True):
+    rc = rc or RunConfig(mode="prefill", remat=False, int8_prefill=True)
+    param_specs = model.param_specs(quantized=quantized)
+    step = make_prefill_step(model, rc)
+    pspec = shd.param_pspecs(param_specs, mesh)
+    bspec = shd.batch_pspecs(specs, mesh)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(shd.to_named(pspec, mesh), shd.to_named(bspec, mesh)),
+        )
+        lowered = jitted.lower(param_specs, specs)
+    return lowered
+
+
+def make_decode_step(model: Model, rc: RunConfig):
+    def decode_step(params, tokens, positions, caches):
+        rc_d = rc.replace(mode="decode")
+        logits, new_caches = model.decode(params, tokens, positions, caches, rc_d)
+        return logits, new_caches
+
+    return decode_step
+
+
+def lower_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
+                      rc: Optional[RunConfig] = None, *,
+                      quantized: bool = True, vq_mode: str = "eva",
+                      quantize_lm_head: bool = False):
+    """specs: {"tokens", "positions", "caches"} from model.input_specs."""
+    rc = rc or RunConfig(mode="decode", remat=False, vq_mode=vq_mode)
+    rc = rc.replace(vq_mode=vq_mode if quantized else "none")
+    param_specs = model.param_specs(quantized=quantized,
+                                    quantize_lm_head=quantize_lm_head)
+    step = make_decode_step(model, rc)
+    pspec = shd.param_pspecs(param_specs, mesh)
+    cspec = shd.cache_pspecs(specs["caches"], mesh)
+    tspec = shd.batch_pspecs(
+        {"tokens": specs["tokens"], "positions": specs["positions"]}, mesh
+    )
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                shd.to_named(pspec, mesh),
+                shd.to_named(tspec["tokens"], mesh),
+                shd.to_named(tspec["positions"], mesh),
+                shd.to_named(cspec, mesh),
+            ),
+            donate_argnums=(3,),
+        )
+        lowered = jitted.lower(
+            param_specs, specs["tokens"], specs["positions"], specs["caches"]
+        )
+    return lowered

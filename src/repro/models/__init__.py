@@ -1,0 +1,2 @@
+from repro.models.api import Model, build_model, param_count, SHAPES
+from repro.models.common import ModelConfig, RunConfig

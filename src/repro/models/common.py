@@ -1,0 +1,798 @@
+"""Shared model building blocks: configs, norms, rotary embeddings,
+linear layers (dense / int8 / VQ), attention variants (GQA, SWA, local,
+MLA), MoE, and cache containers.
+
+Everything is pure-functional: params are pytrees of arrays (or VQWeight
+nodes after quantization), and every block is written to be scanned over a
+stacked leading layer axis with jax.lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vq import VQWeight
+from repro.core import ops as core_ops
+
+Params = Any
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | xlstm | rglru | whisper | vision
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0          # >0: SWA for all attn layers (mixtral)
+    local_window: int = 0            # >0: local attention window (recurrentgemma)
+    # MLA (deepseek)
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (recurrentgemma): layers % pattern applied in order
+    rec_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    d_rnn: int = 0
+    conv_width: int = 4
+    # xlstm
+    xlstm_pattern: Tuple[str, ...] = ()  # e.g. ("mlstm", "slstm")
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    # vision (llama-3.2-vision): one cross-attn layer per `cross_attn_period`
+    cross_attn_period: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # VQ config (paper defaults: d=8, n=8, C=q)
+    vq_d: int = 8
+    vq_n: int = 8
+    vq_C: int = 2
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 128 for TP-friendly sharding
+        (whisper's 51865 -> 51968; see DESIGN.md §4)."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Static execution-mode knobs threaded through every block."""
+    mode: str = "train"          # train | prefill | decode
+    vq_mode: str = "none"        # none | eva | dequant   (FC layers)
+    impl: str = "jnp"            # jnp | pallas
+    int8_prefill: bool = False   # paper's INT8 prefill path
+    attn_chunk: int = 1024       # kv/q chunk for blocked attention
+    attn_skip_oob_chunks: bool = False  # hillclimb: skip fully-masked chunks
+    remat: bool = True
+    interpret: bool = False      # pallas interpret mode (CPU validation)
+    block_v: int = 32
+    # ---- perf-iteration levers (EXPERIMENTS.md §Perf) ----
+    lm_head_last_only: bool = False  # prefill: project only the last token
+    mla_absorb: bool = False         # MLA decode in latent space (weight absorption)
+    kv_cache_int8: bool = False      # int8-quantized KV cache (GQA decode)
+    kv_cache_int4: bool = False      # int4-quantized KV cache (more aggressive)
+    eva_flat_gather: bool = False    # flat-index epilogue gather (SPMD-friendly)
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, K, N, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(K)
+    return jax.random.normal(key, (K, N), dtype) * scale
+
+
+def make_linear(key, K, N, *, bias=False, dtype=jnp.float32) -> Params:
+    p = {"w": _dense_init(key, K, N, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((N,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Linear apply — the single place where EVA enters the model
+# ---------------------------------------------------------------------------
+
+
+def linear(p: Params, x: jax.Array, rc: RunConfig, *, out_dtype=None) -> jax.Array:
+    """Apply a (possibly VQ-quantized) linear layer under the current
+    execution mode.
+
+      train           -> dense bf16/fp32 matmul
+      prefill (+int8) -> int8 GEMM (paper's reconfigurable-PE INT8 mode)
+      decode  (vq)    -> EVA VQ-GEMM + OC lookup (or dequant baseline)
+    """
+    out_dtype = out_dtype or x.dtype
+    if "vq" in p:
+        vq: VQWeight = p["vq"]
+        if rc.mode == "decode" or rc.vq_mode != "none":
+            mode = rc.vq_mode if rc.vq_mode != "none" else "eva"
+            y = core_ops.vq_matmul(
+                x, vq, mode=mode, out_dtype=out_dtype,
+                impl=rc.impl, interpret=rc.interpret,
+                flat_gather=rc.eva_flat_gather,
+            )
+        else:  # pragma: no cover - vq params always run a vq mode
+            y = core_ops.dequant_matmul(x, vq, out_dtype=out_dtype)
+    else:
+        w = p["w"].astype(x.dtype) if p["w"].dtype != x.dtype else p["w"]
+        if rc.mode == "prefill" and rc.int8_prefill:
+            if rc.impl == "pallas":
+                from repro.kernels.int8_gemm import int8_matmul_kernel
+
+                y = int8_matmul_kernel(x, p["w"], interpret=rc.interpret, out_dtype=out_dtype)
+            else:
+                y = core_ops.int8_matmul(x, p["w"], out_dtype=out_dtype)
+        else:
+            y = core_ops.fp_matmul(x, w, out_dtype=out_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms & rotary
+# ---------------------------------------------------------------------------
+
+
+def make_rmsnorm(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(dt)
+
+
+def make_layernorm(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b2": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b2"]).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) attention with online softmax
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunk_scores(q, k, scale):
+    # q: (B, Sq, H, hd), k: (B, Ck, Hk, hd) -> scores (B, H, Sq, Ck)
+    B, Sq, H, hd = q.shape
+    Hk = k.shape[2]
+    group = H // Hk
+    qg = q.reshape(B, Sq, Hk, group, hd)
+    s = jnp.einsum("bshgd,bchd->bhgsc", qg.astype(jnp.float32), k.astype(jnp.float32))
+    return (s * scale).reshape(B, Hk * group, Sq, k.shape[1])
+
+
+def _attn_chunk_apply(p, v):
+    # p: (B, H, Sq, Ck), v: (B, Ck, Hk, hd) -> (B, Sq, H, hd)
+    B, H, Sq, Ck = p.shape
+    Hk = v.shape[2]
+    group = H // Hk
+    pg = p.reshape(B, Hk, group, Sq, Ck)
+    o = jnp.einsum("bhgsc,bchd->bshgd", pg, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hk * group, v.shape[-1])
+
+
+def blocked_attention(
+    q: jax.Array,              # (B, Sq, H, hd)
+    k: jax.Array,              # (B, Skv, Hk, hd)
+    v: jax.Array,              # (B, Skv, Hk, hd)
+    *,
+    causal: bool,
+    window: int = 0,           # >0: only attend within `window` positions back
+    q_offset: int = 0,         # absolute position of q[0] (for cached decode)
+    chunk: int = 1024,
+    skip_oob_chunks: bool = False,
+) -> jax.Array:
+    """Memory-bounded attention: q processed in chunks (unrolled), kv scanned
+    with online softmax. `skip_oob_chunks` statically skips kv chunks that
+    are fully masked (causal future / outside the sliding window) — the
+    'triangular schedule' perf option (§Perf)."""
+    B, Sq, H, hd = q.shape
+    hd_v = v.shape[-1]          # may differ from hd (MLA)
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(chunk, Sq)
+    ck = min(chunk, Skv)
+    # pad to multiples
+    pq, pk = (-Sq) % cq, (-Skv) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+
+    k_chunks = k.reshape(B, nk, ck, *k.shape[2:]).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(B, nk, ck, *v.shape[2:]).transpose(1, 0, 2, 3, 4)
+    kv_pos = (jnp.arange(nk * ck)).reshape(nk, ck)
+
+    outs = []
+    for iq in range(nq):
+        qi = q[:, iq * cq:(iq + 1) * cq]
+        q_pos = q_offset + iq * cq + jnp.arange(cq)          # (cq,)
+        q_last = q_offset + iq * cq + cq - 1
+        q_first = q_offset + iq * cq
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kc, vc, pos_c = inputs
+            s = _attn_chunk_scores(qi, kc, scale)            # (B,H,cq,ck)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= pos_c[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= pos_c[None, :] > (q_pos[:, None] - window)
+            # mask out kv padding
+            mask &= (pos_c < Skv)[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            o = _attn_chunk_apply(p, vc)                     # (B,cq,H,hd)
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + o
+            return (m_new, l_new, acc_new), None
+
+        # choose which kv chunks this q chunk touches
+        if skip_oob_chunks:
+            sel = []
+            for jk in range(nk):
+                lo, hi = jk * ck, jk * ck + ck - 1
+                if causal and lo > q_last:
+                    continue
+                if window > 0 and hi <= q_first - window:
+                    continue
+                sel.append(jk)
+            sel = np.asarray(sel, np.int32)
+        else:
+            sel = np.arange(nk, dtype=np.int32)
+
+        kc_sel = k_chunks[sel]
+        vc_sel = v_chunks[sel]
+        pos_sel = kv_pos[sel]
+        m0 = jnp.full((B, H, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, H, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc_sel, vc_sel, pos_sel))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        outs.append(out)
+
+    out = jnp.concatenate(outs, axis=1)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, hd)
+    k_cache: jax.Array,    # (B, S, Hk, hd)
+    v_cache: jax.Array,    # (B, S, Hk, hd)
+    cache_len: jax.Array,  # (B,) valid lengths (ring caches pass full S)
+    *,
+    window: int = 0,
+    ring: bool = False,
+) -> jax.Array:
+    """Single-token attention over a (possibly ring-buffered) KV cache."""
+    B, S, Hk, hd = k_cache.shape
+    H = q.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    s = _attn_chunk_scores(q, k_cache, scale)[:, :, 0]  # (B, H, S)
+    pos = jnp.arange(S)[None, :]                        # (1, S)
+    if ring:
+        # ring buffer: every slot written within the last `window` steps is
+        # valid once cache_len >= window; before that only slots < cache_len
+        valid = pos < jnp.minimum(cache_len, S)[:, None]
+    else:
+        valid = pos < cache_len[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _attn_chunk_apply(p[:, :, None, :], v_cache)    # (B,1,H,hd)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (covers dense archs, SWA, local attn, whisper self/cross)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_kv(x: jax.Array, dtype=jnp.int8):
+    """Per-(token, head) symmetric int quantization of a K/V slice.
+    x: (B, S, Hk, hd) -> (intN values, per-(B,S,Hk) scales)."""
+    qmax = 127.0 if dtype == jnp.int8 else 7.0
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -qmax, qmax).astype(dtype)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def make_attention(key, cfg: ModelConfig, *, bias: Optional[bool] = None) -> Params:
+    bias = cfg.qkv_bias if bias is None else bias
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": make_linear(ks[0], cfg.d_model, cfg.q_dim, bias=bias),
+        "wk": make_linear(ks[1], cfg.d_model, cfg.kv_dim, bias=bias),
+        "wv": make_linear(ks[2], cfg.d_model, cfg.kv_dim, bias=bias),
+        "wo": make_linear(ks[3], cfg.q_dim, cfg.d_model, bias=False),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = make_rmsnorm(cfg.head_dim)
+        p["knorm"] = make_rmsnorm(cfg.head_dim)
+    return p
+
+
+def attention_fwd(
+    p: Params,
+    x: jax.Array,                     # (B, S, D)
+    rc: RunConfig,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,             # (B, S)
+    cache: Optional[Dict] = None,     # {"k","v","len"} for decode
+    window: int = 0,
+    causal: bool = True,
+    kv_source: Optional[jax.Array] = None,  # cross-attention memory (B, Skv, D)
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = linear(p["wq"], x, rc).reshape(B, S, H, hd)
+    kv_in = kv_source if kv_source is not None else x
+    Skv_in = kv_in.shape[1]
+    k = linear(p["wk"], kv_in, rc).reshape(B, Skv_in, Hk, hd)
+    v = linear(p["wv"], kv_in, rc).reshape(B, Skv_in, Hk, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(p["knorm"], k, cfg.norm_eps)
+    if kv_source is None:  # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if rc.mode == "decode" and cache is not None and kv_source is None:
+        # write the new token into the (ring) cache
+        Sc = cache["k"].shape[1]
+        cache_len = cache["len"]                       # (B,)
+        slot = (cache_len % Sc) if window > 0 else jnp.minimum(cache_len, Sc - 1)
+        int8_cache = "k_s" in cache  # §Perf: int8/int4-quantized KV cache
+        if int8_cache:
+            cdt = cache["k"].dtype
+            kq, ks_ = _quantize_kv(k, cdt)
+            vq_, vs_ = _quantize_kv(v, cdt)
+            upd3 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0))
+            upd2 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0))
+            k_cache = jax.vmap(upd3)(cache["k"], slot, kq)
+            v_cache = jax.vmap(upd3)(cache["v"], slot, vq_)
+            k_s = jax.vmap(upd2)(cache["k_s"], slot, ks_)
+            v_s = jax.vmap(upd2)(cache["v_s"], slot, vs_)
+            new_len = cache_len + 1
+            o = decode_attention(
+                q,
+                k_cache.astype(jnp.bfloat16) * k_s[..., None].astype(jnp.bfloat16),
+                v_cache.astype(jnp.bfloat16) * v_s[..., None].astype(jnp.bfloat16),
+                new_len, window=window, ring=window > 0,
+            )
+            new_cache = {"k": k_cache, "v": v_cache, "k_s": k_s, "v_s": v_s,
+                         "len": new_len}
+        else:
+            k_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0)))(
+                cache["k"], slot, k.astype(cache["k"].dtype)
+            )
+            v_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0)))(
+                cache["v"], slot, v.astype(cache["v"].dtype)
+            )
+            new_len = cache_len + 1
+            if rc.impl == "pallas" and window == 0:
+                from repro.kernels.flash_decode import flash_decode
+
+                o = flash_decode(q, k_cache, v_cache, new_len,
+                                 interpret=rc.interpret)
+            else:
+                o = decode_attention(
+                    q, k_cache, v_cache, new_len, window=window,
+                    ring=window > 0,
+                )
+            new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+    elif rc.mode == "decode" and cache is not None and kv_source is not None:
+        # cross-attention decode: static memory cache
+        o = decode_attention(q, cache["k"], cache["v"], cache["len"])
+        new_cache = cache
+    else:
+        o = blocked_attention(
+            q, k, v,
+            causal=causal, window=window,
+            chunk=rc.attn_chunk, skip_oob_chunks=rc.attn_skip_oob_chunks,
+        )
+        if rc.mode == "prefill":
+            new_cache = {"k": k, "v": v, "len": positions[:, -1] + 1}
+
+    y = linear(p["wo"], o.reshape(B, S, H * hd), rc)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v2): compressed KV latent cache
+# ---------------------------------------------------------------------------
+
+
+def make_mla(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    H = cfg.num_heads
+    qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": make_linear(ks[0], cfg.d_model, H * qk_head),
+        "wkv_a": make_linear(ks[1], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": make_rmsnorm(cfg.kv_lora_rank),
+        "wkv_b": make_linear(ks[2], cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": make_linear(ks[3], H * cfg.v_head_dim, cfg.d_model),
+    }
+
+
+def mla_fwd(
+    p: Params,
+    x: jax.Array,
+    rc: RunConfig,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Multi-head Latent Attention: KV compressed to (kv_lora_rank +
+    qk_rope_dim) per token — the decode cache stores only the latent."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+
+    q = linear(p["wq"], x, rc).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = linear(p["wkv_a"], x, rc)                      # (B, S, r + dr)
+    latent, k_rope = kv_a[..., :r], kv_a[..., r:]
+    latent = rmsnorm(p["kv_norm"], latent, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    def expand(latent_, k_rope_):
+        kv = linear(p["wkv_b"], latent_, rc).reshape(
+            latent_.shape[0], latent_.shape[1], H, dn + dv
+        )
+        k_nope, vv = kv[..., :dn], kv[..., dn:]
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_, (*k_nope.shape[:3], dr))], axis=-1
+        )
+        return kk, vv
+
+    new_cache = None
+    if rc.mode == "decode" and cache is not None:
+        Sc = cache["latent"].shape[1]
+        cache_len = cache["len"]
+        slot = jnp.minimum(cache_len, Sc - 1)
+        lat_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
+            cache["latent"], slot, latent.astype(cache["latent"].dtype).reshape(B, 1, r)
+        )
+        kr_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
+            cache["k_rope"], slot, k_rope.astype(cache["k_rope"].dtype).reshape(B, 1, dr)
+        )
+        new_len = cache_len + 1
+        if rc.mla_absorb:
+            # Weight-absorbed MLA (§Perf): attention runs in the latent
+            # space — wkv_b is folded into the query/output sides so the
+            # S-length cache is never re-expanded through wkv_b.
+            # wkv_b is tiny (r x H(dn+dv)); dequantize it if VQ'd.
+            if "vq" in p["wkv_b"]:
+                from repro.core.vq import dequantize as _deq
+
+                wb = _deq(p["wkv_b"]["vq"])
+            else:
+                wb = p["wkv_b"]["w"]
+            wb = wb.astype(jnp.float32).reshape(r, H, dn + dv)
+            Wk, Wv = wb[..., :dn], wb[..., dn:]
+            latf = lat_cache.astype(jnp.float32)          # (B, S, r)
+            krf = kr_cache.astype(jnp.float32)            # (B, S, dr)
+            q_eff = jnp.einsum("bshd,rhd->bshr",
+                               q_nope.astype(jnp.float32), Wk)  # (B,1,H,r)
+            # queries are tiny — replicate them over 'model' so the scores
+            # stay S-sharded like the latent cache (otherwise GSPMD
+            # all-to-alls the whole cache to head-sharded layout, §Perf)
+            dpq = ("pod", "data")
+            q_eff = _maybe_constrain(q_eff, (dpq, None, None, None))
+            q_rope_r = _maybe_constrain(
+                q_rope.astype(jnp.float32), (dpq, None, None, None))
+            s_nope = jnp.einsum("bshr,bSr->bhsS", q_eff, latf)
+            s_rope = jnp.einsum("bshd,bSd->bhsS", q_rope_r, krf)
+            scores = (s_nope + s_rope) / jnp.sqrt(float(dn + dr))
+            pos = jnp.arange(Sc)[None, :]
+            valid = pos < new_len[:, None]
+            scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+            attn = jax.nn.softmax(scores, axis=-1)        # (B,H,1,S)
+            o_lat = jnp.einsum("bhsS,bSr->bshr", attn, latf)
+            o = jnp.einsum("bshr,rhv->bshv", o_lat, Wv).astype(x.dtype)
+        else:
+            # faithful baseline: expand the whole latent cache per step
+            kk, vv = expand(lat_cache, kr_cache[:, :, None, :])
+            qq = jnp.concatenate([q_nope, q_rope], axis=-1)   # (B,1,H,dn+dr)
+            o = decode_attention(qq, kk, vv, new_len)
+        new_cache = {"latent": lat_cache, "k_rope": kr_cache, "len": new_len}
+    else:
+        kk, vv = expand(latent, k_rope)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = blocked_attention(
+            qq, kk, vv, causal=True, chunk=rc.attn_chunk,
+            skip_oob_chunks=rc.attn_skip_oob_chunks,
+        )
+        if rc.mode == "prefill":
+            new_cache = {
+                "latent": latent, "k_rope": k_rope.reshape(B, S, dr),
+                "len": positions[:, -1] + 1,
+            }
+
+    y = linear(p["wo"], o.reshape(B, S, H * dv), rc)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs and MoE
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": make_linear(ks[0], d_model, d_ff),
+        "up": make_linear(ks[1], d_model, d_ff),
+        "down": make_linear(ks[2], d_ff, d_model),
+    }
+
+
+def mlp_fwd(p: Params, x: jax.Array, rc: RunConfig) -> jax.Array:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x, rc)) * linear(p["up"], x, rc), rc)
+
+
+def make_gelu_mlp(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"up": make_linear(ks[0], d_model, d_ff, bias=True),
+            "down": make_linear(ks[1], d_ff, d_model, bias=True)}
+
+
+def gelu_mlp_fwd(p: Params, x: jax.Array, rc: RunConfig) -> jax.Array:
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x, rc)), rc)
+
+
+def make_moe(key, cfg: ModelConfig) -> Params:
+    """Experts stored stacked on a leading E axis (EP-shardable)."""
+    ks = jax.random.split(key, 5)
+    E, dff = cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    def stack_init(k, K, N):
+        return jax.vmap(lambda kk: _dense_init(kk, K, N))(jax.random.split(k, E))
+    p = {
+        "router": {"wr": _dense_init(ks[0], cfg.d_model, E)},
+        "experts": {
+            "gate": {"w": stack_init(ks[1], cfg.d_model, dff)},
+            "up": {"w": stack_init(ks[2], cfg.d_model, dff)},
+            "down": {"w": stack_init(ks[3], dff, cfg.d_model)},
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = make_mlp(ks[4], cfg.d_model, dff * cfg.num_shared_experts)
+    return p
+
+
+def _expert_ffn(ep: Params, x: jax.Array, rc: RunConfig) -> jax.Array:
+    """x: (E, cap, D) with per-expert stacked params (leading E)."""
+    def one(e_gate, e_up, e_down, xe):
+        h = jax.nn.silu(linear(e_gate, xe, rc)) * linear(e_up, xe, rc)
+        return linear(e_down, h, rc)
+
+    return jax.vmap(one)(ep["gate"], ep["up"], ep["down"], x)
+
+
+def _mesh_divides(axis: str, dim: int) -> bool:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+        if mesh.empty or axis not in mesh.axis_names:
+            return False
+        return dim % mesh.shape[axis] == 0
+    except Exception:
+        return False
+
+
+def _maybe_constrain(x: jax.Array, spec_axes) -> jax.Array:
+    """Apply a sharding constraint when running under a mesh context.
+
+    MoE dispatch/combine buffers have no input sharding to propagate from;
+    without an explicit constraint SPMD tends to replicate them, turning
+    expert FFNs into (chips x) redundant compute. spec_axes maps axis ->
+    preferred mesh axis name (skipped when the axis is absent)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        parts = []
+        for ax in spec_axes:
+            if ax is None or (isinstance(ax, str) and ax not in mesh.axis_names):
+                parts.append(None)
+            elif isinstance(ax, tuple):
+                sel = tuple(a for a in ax if a in mesh.axis_names)
+                parts.append(sel if sel else None)
+            else:
+                parts.append(ax)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*parts))
+        )
+    except Exception:  # no mesh / incompatible: run unconstrained
+        return x
+
+
+def moe_fwd(p: Params, x: jax.Array, rc: RunConfig, cfg: ModelConfig) -> jax.Array:
+    """Token-choice top-k MoE with capacity-based dense dispatch
+    (einsum dispatch/combine — shardable over the expert axis)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xt = x.reshape(-1, D)                                   # (T, D)
+    T = xt.shape[0]
+    E, k = cfg.num_experts, cfg.top_k
+
+    logits = core_ops.fp_matmul(xt, p["router"]["wr"].astype(xt.dtype),
+                                out_dtype=jnp.float32)      # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                    # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
+    cap = min(cap, T)
+    # position of each (t, k) selection within its expert's capacity buffer
+    sel_onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)     # (T, k, E)
+    flat = sel_onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                       # (T*k, E)
+    pos = jnp.einsum("se,se->s", pos, flat).astype(jnp.int32)   # (T*k,)
+    keep = pos < cap
+    expert_of = topi.reshape(T * k)
+    weight_of = (topv.reshape(T * k) * keep).astype(jnp.float32)
+
+    # dispatch: (E, cap, D) — expert axis on 'model' (EP) when divisible,
+    # else capacity over 'data'; without these constraints SPMD replicates
+    # the dispatch buffer and every chip computes every expert.
+    ep_ok = _mesh_divides("model", E)
+    disp_spec = ("model", None, None) if ep_ok else (None, "data", None)
+    tok_of = jnp.repeat(jnp.arange(T), k)
+    slot = jnp.minimum(pos, cap - 1)
+    if T * k * E * cap <= (1 << 22):
+        # §Perf: decode-sized dispatch via one-hot einsums — GSPMD
+        # partitions matmuls far better than scatters (the scatter path
+        # produced ~5x extra all-to-all/permute traffic per layer).
+        oh = (jax.nn.one_hot(expert_of, E, dtype=jnp.float32)
+              * keep[:, None].astype(jnp.float32))               # (S', E)
+        ohc = oh[:, :, None] * jax.nn.one_hot(slot, cap,
+                                              dtype=jnp.float32)[:, None, :]
+        disp = jnp.einsum("sec,sd->ecd", ohc,
+                          xt[tok_of].astype(jnp.float32)).astype(xt.dtype)
+        disp = _maybe_constrain(disp, disp_spec)
+        out_e = _expert_ffn(p["experts"], disp, rc)              # (E, cap, D)
+        out_e = _maybe_constrain(out_e, disp_spec)
+        gathered = jnp.einsum("sec,ecd->sd", ohc,
+                              out_e.astype(jnp.float32))         # (T*k, D)
+    else:
+        disp = jnp.zeros((E, cap, D), xt.dtype)
+        disp = disp.at[expert_of, slot].add(
+            jnp.where(keep[:, None], xt[tok_of], 0).astype(xt.dtype)
+        )
+        disp = _maybe_constrain(disp, disp_spec)
+        out_e = _expert_ffn(p["experts"], disp, rc)              # (E, cap, D)
+        out_e = _maybe_constrain(out_e, disp_spec)
+        gathered = out_e[expert_of, slot].astype(jnp.float32)    # (T*k, D)
+    comb = (gathered.astype(jnp.float32) * weight_of[:, None]).reshape(T, k, D).sum(1)
+    y = comb.astype(x.dtype)
+    if cfg.num_shared_experts:
+        y = y + mlp_fwd(p["shared"], xt, rc)
+    return y.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def make_embedding(key, vocab: int, d: int) -> Params:
+    return {"emb": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["emb"], tokens, axis=0).astype(dtype)
+
+
+def lm_head(p: Params, x: jax.Array, rc: RunConfig, emb_params=None) -> jax.Array:
+    if p is None:  # tied
+        w = emb_params["emb"].T
+        return core_ops.fp_matmul(x, w.astype(x.dtype), out_dtype=jnp.float32)
+    return linear(p, x, rc, out_dtype=jnp.float32)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    """logits (B,S,V) fp32, labels (B,S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

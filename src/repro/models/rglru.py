@@ -1,0 +1,261 @@
+"""RecurrentGemma family (arXiv:2402.19427): Griffin-style hybrid of
+RG-LRU recurrent blocks and local (sliding-window) attention, pattern
+(rec, rec, attn) — 1 attention per 2 recurrent layers.
+
+RG-LRU recurrence (diagonal, parallelized with associative_scan):
+    r_t = sigmoid(W_a y_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x y_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+Temporal-mixing block: gate branch (linear+gelu) * (linear -> causal
+conv1d(width 4) -> RG-LRU) -> out projection. Every layer is followed by a
+gated-GeLU MLP. 26 layers = 8 x (rec, rec, attn) + 2 trailing rec.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig, RunConfig
+
+RGLRU_C = 8.0
+
+
+def make_rec_layer(key, cfg: ModelConfig) -> Any:
+    d, dr = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a ~ U[0.9, 0.999] at r=1 (paper's init range)
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus^-1(-log(u)/c)
+    return {
+        "norm": cm.make_rmsnorm(d),
+        "gate_proj": cm.make_linear(ks[1], d, dr),
+        "x_proj": cm.make_linear(ks[2], d, dr),
+        "cw": jax.random.normal(ks[3], (cfg.conv_width, dr), jnp.float32) * 0.1,
+        "cb": jnp.zeros((dr,), jnp.float32),
+        "wa": cm.make_linear(ks[4], dr, dr, bias=True),
+        "wx": cm.make_linear(ks[5], dr, dr, bias=True),
+        "lam": lam,
+        "out": cm.make_linear(ks[6], dr, d),
+        "mlp_norm": cm.make_rmsnorm(d),
+        "mlp": cm.make_mlp(ks[7], d, cfg.d_ff),
+    }
+
+
+def make_attn_layer(key, cfg: ModelConfig) -> Any:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": cm.make_rmsnorm(cfg.d_model),
+        "attn": cm.make_attention(ks[0], cfg),
+        "mlp_norm": cm.make_rmsnorm(cfg.d_model),
+        "mlp": cm.make_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def causal_conv1d(y: jax.Array, cw: jax.Array, cb: jax.Array,
+                  buf: Optional[jax.Array] = None):
+    """Depthwise causal conv. y: (B, S, dr); cw: (W, dr). Returns (out,
+    new_buf) where buf carries the last W-1 inputs for decoding."""
+    B, S, dr = y.shape
+    W = cw.shape[0]
+    if buf is None:
+        ypad = jnp.pad(y, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        ypad = jnp.concatenate([buf.astype(y.dtype), y], axis=1)
+    out = jnp.zeros_like(y, dtype=jnp.float32)
+    for w in range(W):
+        out = out + ypad[:, w:w + S].astype(jnp.float32) * cw[w][None, None, :]
+    new_buf = ypad[:, -(W - 1):] if W > 1 else None
+    return (out + cb[None, None, :]).astype(y.dtype), new_buf
+
+
+def rg_lru(y: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+           h0: jax.Array):
+    """y/r/i: (B, S, dr); h0: (B, dr). Parallel linear recurrence via
+    associative_scan. Returns (h_seq (B,S,dr) fp32, h_last)."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam)[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * y.astype(jnp.float32)
+    )
+    # prepend h0 as the first element with a=0 so scan absorbs it
+    a_all = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+    b_all = jnp.concatenate([h0[:, None, :], gated], axis=1)
+
+    def combine(x, y_):
+        a1, b1 = x
+        a2, b2 = y_
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    hs = bb[:, 1:]
+    return hs, hs[:, -1]
+
+
+def rec_layer_fwd(lp, x, rc: RunConfig, cfg: ModelConfig, cache=None):
+    B, S, D = x.shape
+    xn = cm.rmsnorm(lp["norm"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(cm.linear(lp["gate_proj"], xn, rc))
+    y = cm.linear(lp["x_proj"], xn, rc)
+    buf = None if cache is None else cache["conv"]
+    y, new_buf = causal_conv1d(y, lp["cw"], lp["cb"], buf)
+    r = jax.nn.sigmoid(cm.linear(lp["wa"], y, rc, out_dtype=jnp.float32))
+    i = jax.nn.sigmoid(cm.linear(lp["wx"], y, rc, out_dtype=jnp.float32))
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, cfg.d_rnn), jnp.float32)
+    hs, h_last = rg_lru(y, r, i, lp["lam"], h0)
+    out = cm.linear(lp["out"], (hs.astype(x.dtype) * gate), rc)
+    x = x + out
+    h2 = cm.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    x = x + cm.mlp_fwd(lp["mlp"], h2, rc)
+    new_cache = None
+    if rc.mode in ("decode", "prefill"):
+        new_cache = {"h": h_last, "conv": new_buf.astype(x.dtype)}
+    return x, new_cache
+
+
+def attn_layer_fwd(lp, x, rc: RunConfig, cfg: ModelConfig, *, positions, cache=None):
+    h = cm.rmsnorm(lp["norm"], x, cfg.norm_eps)
+    a, new_cache = cm.attention_fwd(
+        lp["attn"], h, rc, cfg,
+        positions=positions, cache=cache, window=cfg.local_window,
+    )
+    x = x + a
+    h = cm.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    return x + cm.mlp_fwd(lp["mlp"], h, rc), new_cache
+
+
+# ---------------------------------------------------------------------------
+# model: scan over (rec, rec, attn) super-blocks + trailing rec layers
+# ---------------------------------------------------------------------------
+
+
+def _split(cfg: ModelConfig) -> Tuple[int, int]:
+    period = len(cfg.rec_pattern)          # 3
+    n_groups = cfg.num_layers // period    # 8 for 26 layers
+    n_trail = cfg.num_layers - n_groups * period  # 2
+    return n_groups, n_trail
+
+
+def init_params(key, cfg: ModelConfig) -> Any:
+    n_groups, n_trail = _split(cfg)
+    ks = jax.random.split(key, 5)
+
+    def group_init(k):
+        gks = jax.random.split(k, len(cfg.rec_pattern))
+        g = {}
+        for i, kind in enumerate(cfg.rec_pattern):
+            g[f"b{i}_{kind}"] = (
+                make_rec_layer(gks[i], cfg) if kind == "rec"
+                else make_attn_layer(gks[i], cfg)
+            )
+        return g
+
+    params = {
+        "embedding": cm.make_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "groups": jax.vmap(group_init)(jax.random.split(ks[1], n_groups)),
+        "final_norm": cm.make_rmsnorm(cfg.d_model),
+        "lm_head": cm.make_linear(ks[2], cfg.d_model, cfg.padded_vocab),
+    }
+    if n_trail:
+        params["trail"] = jax.vmap(lambda k: make_rec_layer(k, cfg))(
+            jax.random.split(ks[3], n_trail)
+        )
+    return params
+
+
+def _group_fwd(gp, x, rc, cfg, positions, cache):
+    new_cache = {}
+    for i, kind in enumerate(cfg.rec_pattern):
+        name = f"b{i}_{kind}"
+        c = None if cache is None else cache[name]
+        if kind == "rec":
+            x, nc = rec_layer_fwd(gp[name], x, rc, cfg, c)
+        else:
+            x, nc = attn_layer_fwd(gp[name], x, rc, cfg, positions=positions, cache=c)
+        new_cache[name] = nc
+    return x, (new_cache if rc.mode in ("decode", "prefill") else None)
+
+
+def forward(params, tokens, rc: RunConfig, cfg: ModelConfig, *,
+            positions=None, caches=None):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = cm.embed(params["embedding"], tokens, cfg.act_dtype)
+
+    body = functools.partial(_group_fwd, rc=rc, cfg=cfg, positions=positions)
+
+    def step(carry, xs):
+        gp, cache = xs
+        if rc.remat and rc.mode == "train":
+            fn = jax.checkpoint(
+                lambda g_, x_: body(g_, x_, cache=None),
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+            y, nc = fn(gp, carry)
+        else:
+            y, nc = body(gp, carry, cache=cache)
+        return y, nc
+
+    g_caches = None if caches is None else caches["groups"]
+    if g_caches is None:
+        x, new_g = jax.lax.scan(lambda c, gp: step(c, (gp, None)), x, params["groups"])
+    else:
+        x, new_g = jax.lax.scan(step, x, (params["groups"], g_caches))
+
+    new_caches = {"groups": new_g}
+    if "trail" in params:
+        t_caches = None if caches is None else caches["trail"]
+
+        def tstep(carry, xs):
+            lp, cache = xs
+            return rec_layer_fwd(lp, carry, rc, cfg, cache)
+
+        if t_caches is None:
+            x, new_t = jax.lax.scan(lambda c, lp: tstep(c, (lp, None)), x, params["trail"])
+        else:
+            x, new_t = jax.lax.scan(tstep, x, (params["trail"], t_caches))
+        new_caches["trail"] = new_t
+
+    if rc.mode == "prefill" and rc.lm_head_last_only:
+        x = x[:, -1:]  # §Perf: skip the vocab projection for prompt tokens
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = cm.lm_head(params["lm_head"], x, rc)
+    out = new_caches if caches is not None or rc.mode == "prefill" else None
+    return logits, out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Any:
+    dtype = dtype or cfg.act_dtype
+    n_groups, n_trail = _split(cfg)
+    W = min(max_len, cfg.local_window)
+
+    def rec_state(_):
+        return {
+            "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+        }
+
+    def group_state(_):
+        g = {}
+        for i, kind in enumerate(cfg.rec_pattern):
+            if kind == "rec":
+                g[f"b{i}_{kind}"] = rec_state(None)
+            else:
+                g[f"b{i}_{kind}"] = {
+                    "k": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+                    "len": jnp.zeros((batch,), jnp.int32),
+                }
+        return g
+
+    caches = {"groups": jax.vmap(group_state)(jnp.arange(n_groups))}
+    if n_trail:
+        caches["trail"] = jax.vmap(rec_state)(jnp.arange(n_trail))
+    return caches

@@ -1,0 +1,371 @@
+"""xLSTM family (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+mLSTM: matrix memory C (hd x hd per head) with exponential input gate and
+sigmoid forget gate; PARALLELIZABLE — we implement both the sequential
+recurrence (decode + oracle) and a chunkwise-parallel prefill/train form
+(intra-chunk quadratic attention-like computation + inter-chunk state
+scan), property-tested against each other.
+
+sLSTM: scalar memory with exponential gating and block-diagonal (per-head)
+recurrent weights — inherently sequential; prefill/train scan over time.
+
+Block structure (d_ff = 0 per the assignment — projections live inside the
+blocks):
+  mLSTM block: x + down( mLSTM(up_h(norm(x))) * silu(up_g(norm(x))) )
+  sLSTM block: x + out( sLSTM(norm(x)) ), then x + ffn(norm(x)) (pf=4/3)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig, RunConfig
+
+MLSTM_PF = 2      # mLSTM up-projection factor
+SLSTM_PF = 4 / 3  # sLSTM FFN projection factor
+
+
+def _di(cfg):  # mLSTM inner dim
+    return MLSTM_PF * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def make_mlstm_block(key, cfg: ModelConfig) -> Any:
+    di = _di(cfg)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": cm.make_rmsnorm(cfg.d_model),
+        "up_h": cm.make_linear(ks[0], cfg.d_model, di),
+        "up_g": cm.make_linear(ks[1], cfg.d_model, di),
+        "wq": cm.make_linear(ks[2], di, di),
+        "wk": cm.make_linear(ks[3], di, di),
+        "wv": cm.make_linear(ks[4], di, di),
+        "w_if": cm.make_linear(ks[5], di, 2 * H, bias=True),  # i~, f~ per head
+        "down": cm.make_linear(ks[6], di, cfg.d_model),
+    }
+
+
+def _mlstm_gates(p, h, H):
+    g = cm.linear(p["w_if"], h, RunConfig(mode="train"))  # gates stay dense
+    gi, gf = jnp.split(g.astype(jnp.float32), 2, axis=-1)  # (B,S,H) each
+    return gi, jax.nn.log_sigmoid(gf)  # log f in (-inf, 0)
+
+
+def mlstm_sequential(q, k, v, log_i, log_f, state):
+    """Reference recurrence. q/k/v: (B,S,H,hd); log_i/log_f: (B,S,H);
+    state: dict(C (B,H,hd,hd), n (B,H,hd), m (B,H)). Returns (out, state)."""
+    B, S, H, hd = q.shape
+    qs = q.astype(jnp.float32) / math.sqrt(hd)
+
+    def step(st, xs):
+        C, n, m = st
+        qt, kt, vt, li, lf = xs  # (B,H,hd), ..., (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )  # (B,H,hd_v,hd_k)
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (
+        qs.transpose(1, 0, 2, 3), k.astype(jnp.float32).transpose(1, 0, 2, 3),
+        v.astype(jnp.float32).transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    return hs.transpose(1, 0, 2, 3), {"C": C, "n": n, "m": m}
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state, *, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (production prefill/train path).
+
+    Per chunk of length L: intra-chunk contributions via a stabilized
+    quadratic form (like attention with a decay mask), inter-chunk state
+    carried with a scan. Property-tested against mlstm_sequential.
+    """
+    B, S, H, hd = q.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // L
+
+    def to_chunks(x):
+        return x.reshape(B, nc, L, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qc = to_chunks(q.astype(jnp.float32) / math.sqrt(hd))
+    kc = to_chunks(k.astype(jnp.float32))
+    vc = to_chunks(v.astype(jnp.float32))
+    lic = to_chunks(log_i)
+    lfc = to_chunks(log_f)
+
+    def chunk_step(st, xs):
+        C, n, m = st                       # (B,H,hd,hd), (B,H,hd), (B,H)
+        qt, kt, vt, li, lf = xs            # (B,L,H,hd), ..., (B,L,H)
+        csum = jnp.cumsum(lf, axis=1)      # inclusive cumsum of log f
+        # decay from chunk start to position t (inclusive of f_t)
+        b = csum                           # (B,L,H)
+        total = csum[:, -1]                # (B,H)
+        # stabilizers
+        # m_intra[t] = max_{s<=t} (b_t - b_s + li_s); m_state[t] = b_t + m
+        a = li - csum                      # (B,L,H): li_s - b_s
+        m_intra = jax.lax.cummax(a, axis=1) + b
+        m_state = b + m[:, None, :]
+        m_t = jnp.maximum(m_intra, m_state)             # (B,L,H)
+        # inter-chunk (state) contribution
+        w_state = jnp.exp(m_state - m_t)                # (B,L,H)
+        num_state = jnp.einsum("bhvk,blhk->blhv", C, qt) * w_state[..., None]
+        den_state = jnp.einsum("bhk,blhk->blh", n, qt) * w_state
+        # intra-chunk contribution: D[t,s] = exp(b_t - b_s + li_s - m_t), s<=t
+        Dlog = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :]  # (B,t,s,H)
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+        Dlog = jnp.where(mask, Dlog, -1e30)
+        D = jnp.exp(Dlog - m_t[:, :, None, :])          # (B,t,s,H)
+        scores = jnp.einsum("blhk,bshk->blsh", qt, kt) * D
+        num_intra = jnp.einsum("blsh,bshv->blhv", scores, vt)
+        den_intra = scores.sum(axis=2)                   # (B,L,H)
+        num = num_state + num_intra
+        den = den_state + den_intra
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        m_end = jnp.maximum(total + m, jax.lax.cummax(a, axis=1)[:, -1] + total)
+        # decay of old state: exp(total + m - m_end)
+        sdec = jnp.exp(total + m - m_end)                # (B,H)
+        # each position s contributes exp(total - b_s + li_s - m_end)
+        w_s = jnp.exp(total[:, None] - b + li - m_end[:, None])  # (B,L,H)
+        C_new = sdec[..., None, None] * C + jnp.einsum(
+            "bshv,bshk->bhvk", vt * w_s[..., None], kt
+        )
+        n_new = sdec[..., None] * n + jnp.einsum("bshk,bsh->bhk", kt, w_s)
+        return (C_new, n_new, m_end), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]), (qc, kc, vc, lic, lfc)
+    )
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(B, nc * L, H, hd)[:, :S]
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block_fwd(p, x, rc: RunConfig, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    di = _di(cfg)
+    hd = di // H
+    xn = cm.rmsnorm(p["norm"], x, cfg.norm_eps)
+    h = cm.linear(p["up_h"], xn, rc)
+    g = cm.linear(p["up_g"], xn, rc)
+    q = cm.linear(p["wq"], h, rc).reshape(B, S, H, hd)
+    k = cm.linear(p["wk"], h, rc).reshape(B, S, H, hd)
+    v = cm.linear(p["wv"], h, rc).reshape(B, S, H, hd)
+    log_i, log_f = _mlstm_gates(p, h, H)
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    if rc.mode == "decode":
+        out, new_state = mlstm_sequential(q, k, v, log_i, log_f, state)
+    else:
+        out, new_state = mlstm_chunkwise(q, k, v, log_i, log_f, state,
+                                         chunk=min(rc.attn_chunk, 256))
+    out = out.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(g)
+    y = cm.linear(p["down"], out, rc)
+    new_state = new_state if rc.mode in ("decode", "prefill") else None
+    return x + y, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    hd = _di(cfg) // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def make_slstm_block(key, cfg: ModelConfig) -> Any:
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    ks = jax.random.split(key, 8)
+    d_ffn = int(SLSTM_PF * D) // 8 * 8
+    return {
+        "norm": cm.make_rmsnorm(D),
+        "wz": cm.make_linear(ks[0], D, D, bias=True),
+        "wi": cm.make_linear(ks[1], D, H, bias=True),
+        "wf": cm.make_linear(ks[2], D, H, bias=True),
+        "wo": cm.make_linear(ks[3], D, D, bias=True),
+        # block-diagonal recurrent weights, per head (kept dense, small)
+        "rz": jax.random.normal(ks[4], (H, hd, hd), jnp.float32) / math.sqrt(hd),
+        "out": cm.make_linear(ks[5], D, D),
+        "ffn_norm": cm.make_rmsnorm(D),
+        "ffn": cm.make_gelu_mlp(ks[6], D, d_ffn),
+    }
+
+
+def slstm_scan(p, z_in, i_in, f_in, o_in, state, H, hd):
+    """Sequential sLSTM. *_in: (B, S, ...) preactivations from the input;
+    the recurrent contribution (R h) is added inside the scan."""
+    B, S, D = z_in.shape
+
+    def step(st, xs):
+        c, n, hprev, m = st                     # (B,H,hd),(B,H,hd),(B,H,hd),(B,H)
+        zt, it, ft, ot = xs                     # (B,D),(B,H),(B,H),(B,D)
+        rec = jnp.einsum("bhk,hvk->bhv", hprev, p["rz"])  # (B,H,hd)
+        z = jnp.tanh(zt.reshape(B, H, hd) + rec)
+        li = it                                  # log-space input gate preact
+        lf = jax.nn.log_sigmoid(ft)              # sigmoid forget (stable)
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_[..., None] * c + i_[..., None] * z
+        n = f_[..., None] * n + i_[..., None]
+        h = jax.nn.sigmoid(ot.reshape(B, H, hd)) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = (
+        z_in.transpose(1, 0, 2).astype(jnp.float32),
+        i_in.transpose(1, 0, 2).astype(jnp.float32),
+        f_in.transpose(1, 0, 2).astype(jnp.float32),
+        o_in.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    st0 = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), hs = jax.lax.scan(step, st0, xs)
+    return hs.transpose(1, 0, 2, 3), {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_block_fwd(p, x, rc: RunConfig, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    xn = cm.rmsnorm(p["norm"], x, cfg.norm_eps)
+    z_in = cm.linear(p["wz"], xn, rc)
+    i_in = cm.linear(p["wi"], xn, rc, out_dtype=jnp.float32)
+    f_in = cm.linear(p["wf"], xn, rc, out_dtype=jnp.float32)
+    o_in = cm.linear(p["wo"], xn, rc)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    hs, new_state = slstm_scan(p, z_in, i_in, f_in, o_in, state, H, hd)
+    y = cm.linear(p["out"], hs.reshape(B, S, D).astype(x.dtype), rc)
+    x = x + y
+    h2 = cm.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    x = x + cm.gelu_mlp_fwd(p["ffn"], h2, rc)
+    new_state = new_state if rc.mode in ("decode", "prefill") else None
+    return x, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# full model: pattern = ("mlstm", "slstm") * (L/2)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Any:
+    period = len(cfg.xlstm_pattern)
+    assert cfg.num_layers % period == 0
+    n_groups = cfg.num_layers // period
+    ks = jax.random.split(key, 4)
+
+    def group_init(k):
+        gks = jax.random.split(k, period)
+        g = {}
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            maker = make_mlstm_block if kind == "mlstm" else make_slstm_block
+            g[f"b{i}_{kind}"] = maker(gks[i], cfg)
+        return g
+
+    return {
+        "embedding": cm.make_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "groups": jax.vmap(group_init)(jax.random.split(ks[1], n_groups)),
+        "final_norm": cm.make_rmsnorm(cfg.d_model),
+        "lm_head": cm.make_linear(ks[2], cfg.d_model, cfg.padded_vocab),
+    }
+
+
+def _group_fwd(gp, x, rc, cfg, cache):
+    new_cache = {}
+    for i, kind in enumerate(cfg.xlstm_pattern):
+        name = f"b{i}_{kind}"
+        st = None if cache is None else cache[name]
+        if kind == "mlstm":
+            x, ns = mlstm_block_fwd(gp[name], x, rc, cfg, st)
+        else:
+            x, ns = slstm_block_fwd(gp[name], x, rc, cfg, st)
+        new_cache[name] = ns
+    return x, (new_cache if rc.mode in ("decode", "prefill") else None)
+
+
+def forward(params, tokens, rc: RunConfig, cfg: ModelConfig, *,
+            positions=None, caches=None):
+    B, S = tokens.shape
+    x = cm.embed(params["embedding"], tokens, cfg.act_dtype)
+
+    body = functools.partial(_group_fwd, rc=rc, cfg=cfg)
+
+    def step(carry, xs):
+        gp, cache = xs
+        if rc.remat and rc.mode == "train":
+            fn = jax.checkpoint(
+                lambda g_, x_: body(g_, x_, cache=None),
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+            y, nc = fn(gp, carry)
+        else:
+            y, nc = body(gp, carry, cache=cache)
+        return y, nc
+
+    if caches is None:
+        x, new_caches = jax.lax.scan(lambda c, gp: step(c, (gp, None)), x, params["groups"])
+    else:
+        x, new_caches = jax.lax.scan(step, x, (params["groups"], caches))
+
+    if rc.mode == "prefill" and rc.lm_head_last_only:
+        x = x[:, -1:]  # §Perf: skip the vocab projection for prompt tokens
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = cm.lm_head(params["lm_head"], x, rc)
+    out = new_caches if caches is not None or rc.mode == "prefill" else None
+    return logits, out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Any:
+    period = len(cfg.xlstm_pattern)
+    n_groups = cfg.num_layers // period
+
+    def one(_):
+        g = {}
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            if kind == "mlstm":
+                g[f"b{i}_{kind}"] = init_mlstm_state(cfg, batch)
+            else:
+                g[f"b{i}_{kind}"] = init_slstm_state(cfg, batch)
+        return g
+
+    return jax.vmap(one)(jnp.arange(n_groups))

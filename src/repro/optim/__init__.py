@@ -1,0 +1,9 @@
+from repro.optim.adamw import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update,
+    SGDConfig, SGDState, sgd_init, sgd_update,
+    clip_by_global_norm, global_norm,
+)
+from repro.optim.schedule import warmup_cosine, warmup_linear, constant
+from repro.optim.compress import (
+    compress_psum, init_error_feedback, compression_ratio,
+)

@@ -1,0 +1,154 @@
+"""Optimizers: AdamW (with fp32 master weights for bf16 params) and
+SGD+momentum. Pure-pytree implementation (no optax dependency), designed
+to be shardable: optimizer state mirrors the param tree so any param
+PartitionSpec applies leaf-wise, and the ZeRO-1 mode additionally shards
+m/v/master over the data axis (see runtime/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = False   # keep fp32 master copies (bf16 training)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 master params or None-like empty tree
+
+
+def _tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    master = (
+        jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), params)
+        if cfg.use_master else None
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=_tree_zeros_like(params, jnp.float32),
+        v=_tree_zeros_like(params, jnp.float32),
+        master=master,
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[Any, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p, mast):
+        g32 = g.astype(jnp.float32)
+        m_ = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_ = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m_ / b1c
+        vhat = v_ / b2c
+        base = mast if mast is not None else p.astype(jnp.float32)
+        new32 = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                             + cfg.weight_decay * base)
+        return new32, m_, v_
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_p = tdef.flatten_up_to(params)
+    flat_mast = (
+        tdef.flatten_up_to(state.master) if state.master is not None
+        else [None] * len(flat_p)
+    )
+    new32s, ms, vs = [], [], []
+    for g, m, v, p, mast in zip(flat_g, flat_m, flat_v, flat_p, flat_mast):
+        n32, m_, v_ = upd(g, m, v, p, mast)
+        new32s.append(n32)
+        ms.append(m_)
+        vs.append(v_)
+    new_params = tdef.unflatten(
+        [n32.astype(p.dtype) for n32, p in zip(new32s, flat_p)]
+    )
+    new_master = tdef.unflatten(new32s) if state.master is not None else None
+    new_state = AdamWState(step=step, m=tdef.unflatten(ms),
+                           v=tdef.unflatten(vs), master=new_master)
+    return new_params, new_state, gnorm
+
+
+# ----------------------------------------------------------------- SGD-M ---
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 1e-2
+    momentum: float = 0.9
+    grad_clip: float = 0.0
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    mom: Any
+
+
+def sgd_init(params: Any, cfg: SGDConfig) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32),
+                    mom=_tree_zeros_like(params, jnp.float32))
+
+
+def sgd_update(grads, state: SGDState, params, cfg: SGDConfig,
+               lr_scale=1.0):
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+
+    def upd(g, mom, p):
+        mom_ = cfg.momentum * mom + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * lr_scale * mom_).astype(p.dtype), mom_
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    outs = [upd(g, m, p) for g, m, p in zip(
+        flat_g, tdef.flatten_up_to(state.mom), tdef.flatten_up_to(params))]
+    return (
+        tdef.unflatten([o[0] for o in outs]),
+        SGDState(step=state.step + 1, mom=tdef.unflatten([o[1] for o in outs])),
+        gnorm,
+    )

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (scalar step -> multiplier on cfg.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def warmup_linear(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    lin = 1.0 - (1.0 - min_ratio) * jnp.clip(prog, 0.0, 1.0)
+    return jnp.where(step < warmup_steps, warm, lin)
+
+
+def constant(step, **_):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (
+    RooflineReport, analyze_compiled, model_flops,
+    PEAK_FLOPS, HBM_BW, LINK_BW,
+)
+from repro.roofline.hlo import analyze, parse_hlo, HloCosts

@@ -1,0 +1,257 @@
+"""HLO-text analysis: per-device FLOPs and collective bytes with while-loop
+trip-count accounting.
+
+XLA's built-in cost_analysis() visits a while body ONCE — with scan-over-
+layers models that undercounts by num_layers. This parser:
+
+  1. splits the post-optimization HLO module into computations,
+  2. records every instruction's output shape,
+  3. counts dot/convolution FLOPs per computation (contraction size looked
+     up from operand definitions),
+  4. sums collective wire bytes per computation (ring-model multipliers,
+     group size parsed from replica_groups),
+  5. walks the call graph from ENTRY, multiplying callee costs by while
+     trip counts (largest integer constant in the loop condition).
+
+Shapes in the SPMD-partitioned module are per-device, so all results are
+per-device values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# NOTE: tuple shapes may contain /*index=N*/ comments (hence `.+?`, not
+# `[^=]+?`); the opcode is the first bare `word(` after the shape text.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_REPL_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPL_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shape(text: str) -> Tuple[int, int]:
+    """Returns (elements, bytes) for a shape string; tuples are summed."""
+    total_e, total_b = 0, 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape_text: str
+    opcode: str
+    operands: List[str]
+    tail: str
+    args: str = ""
+
+    @property
+    def out_bytes(self) -> int:
+        return _parse_shape(self.shape_text)[1]
+
+    @property
+    def out_elems(self) -> int:
+        return _parse_shape(self.shape_text)[0]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instruction]
+    order: List[str]
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), {}, [])
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, shape_text, opcode, args, tail = m.groups()
+                operands = _OPERAND_RE.findall(args)
+                cur.instrs[name] = Instruction(name, shape_text.strip(),
+                                               opcode, operands, tail, args)
+                cur.order.append(name)
+    return comps, entry
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> int:
+    """2 * prod(out dims) * contraction size (from lhs operand shape)."""
+    out_elems = instr.out_elems
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.tail)
+    if not m or not instr.operands:
+        return 2 * out_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = comp.instrs.get(instr.operands[0])
+    if lhs is None:
+        return 2 * out_elems
+    dims_m = _SHAPE_RE.search(lhs.shape_text)
+    if not dims_m:
+        return 2 * out_elems
+    dims = [int(x) for x in dims_m.group(2).split(",") if x]
+    csize = 1
+    for c in cdims:
+        if c < len(dims):
+            csize *= dims[c]
+    return 2 * out_elems * csize
+
+
+def _group_size(tail: str, default: int = 2) -> int:
+    m = _REPL_GROUPS_IOTA_RE.search(tail)
+    if m:
+        return int(m.group(2))
+    m = _REPL_GROUPS_LIST_RE.search(tail)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _collective_bytes(instr: Instruction) -> int:
+    """Per-device wire bytes (ring model)."""
+    out_b = instr.out_bytes
+    g = _group_size(instr.tail)
+    op = instr.opcode.replace("-start", "")
+    if op == "all-reduce":
+        return int(2 * out_b * (g - 1) / max(g, 1))
+    if op == "all-gather":
+        return int(out_b * (g - 1) / max(g, 1))
+    if op == "reduce-scatter":
+        return int(out_b * (g - 1))
+    if op == "all-to-all":
+        return int(out_b * (g - 1) / max(g, 1))
+    if op == "collective-permute":
+        return out_b
+    return 0
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (scan counters
+    compare the induction variable against the trip count)."""
+    best = 1
+    for instr in cond.instrs.values():
+        if instr.opcode == "constant" and instr.args.strip().isdigit():
+            best = max(best, int(instr.args.strip()))
+        for m in _CONST_RE.finditer(instr.tail):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_CALL_ATTRS = ("calls=", "to_apply=", "body=", "condition=",
+               "true_computation=", "false_computation=")
+
+
+def _callees(instr: Instruction) -> List[Tuple[str, str]]:
+    out = []
+    for attr in _CALL_ATTRS:
+        for m in re.finditer(re.escape(attr) + r"%?([\w\.\-]+)", instr.tail):
+            out.append((attr[:-1], m.group(1)))
+    return out
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    collective_bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return HloCosts()
+    memo: Dict[str, HloCosts] = {}
+
+    def walk(name: str) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        cost = HloCosts()
+        memo[name] = cost  # guard cycles
+        if comp is None:
+            return cost
+        for iname in comp.order:
+            instr = comp.instrs[iname]
+            op = instr.opcode
+            if op in ("dot", "convolution"):
+                cost.flops += _dot_flops(instr, comp)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                b = _collective_bytes(instr)
+                cost.collective_bytes += b
+                cost.collective_counts[base] = cost.collective_counts.get(base, 0) + 1
+                cost.collective_bytes_by_op[base] = (
+                    cost.collective_bytes_by_op.get(base, 0.0) + b
+                )
+            callees = _callees(instr)
+            if op == "while":
+                body = next((c for a, c in callees if a == "body"), None)
+                cond = next((c for a, c in callees if a == "condition"), None)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                for sub in (body, cond):
+                    if sub:
+                        s = walk(sub)
+                        cost.flops += trips * s.flops
+                        cost.collective_bytes += trips * s.collective_bytes
+                        for k, v in s.collective_counts.items():
+                            cost.collective_counts[k] = (
+                                cost.collective_counts.get(k, 0) + trips * v
+                            )
+                        for k, v in s.collective_bytes_by_op.items():
+                            cost.collective_bytes_by_op[k] = (
+                                cost.collective_bytes_by_op.get(k, 0.0) + trips * v
+                            )
+            else:
+                for _, sub in callees:
+                    s = walk(sub)
+                    cost.flops += s.flops
+                    cost.collective_bytes += s.collective_bytes
+                    for k, v in s.collective_counts.items():
+                        cost.collective_counts[k] = cost.collective_counts.get(k, 0) + v
+                    for k, v in s.collective_bytes_by_op.items():
+                        cost.collective_bytes_by_op[k] = (
+                            cost.collective_bytes_by_op.get(k, 0.0) + v
+                        )
+        return cost
+
+    return walk(entry)

@@ -1,0 +1,7 @@
+from repro.runtime.sharding import (
+    param_pspecs, opt_pspecs, batch_pspecs, cache_pspecs, to_named,
+)
+from repro.runtime.fault_tolerance import (
+    StepWatchdog, StragglerReport, RestartStats, run_with_restarts,
+)
+from repro.runtime.elastic import reshard_state, valid_dp_sizes

@@ -1,0 +1,41 @@
+"""Elastic scaling: restart training on a different device count.
+
+Because checkpoints store unsharded host arrays (checkpoint/manager.py)
+and the data pipeline is stateless/counter-based (data/pipeline.py),
+elastic restart is: rebuild the mesh at the new size, recompute pspecs,
+device_put the restored state with the new shardings, and resume at the
+saved step — the global batch content and the optimizer math are
+invariant to the new dp_size (tests pin this down).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.runtime import sharding as shd
+
+
+def reshard_state(params: Any, opt_state: Any, model, mesh: Mesh):
+    """Place restored (host) state onto `mesh` with the rule-based specs."""
+    pspec = shd.param_pspecs(params, mesh)
+    mspec = shd.opt_pspecs(pspec, params, mesh, zero1=True)
+    params = jax.device_put(params, shd.to_named(pspec, mesh))
+    new_opt = opt_state._replace(
+        step=jax.device_put(opt_state.step),
+        m=jax.device_put(opt_state.m, shd.to_named(mspec, mesh)),
+        v=jax.device_put(opt_state.v, shd.to_named(mspec, mesh)),
+        master=(jax.device_put(opt_state.master, shd.to_named(mspec, mesh))
+                if opt_state.master is not None else None),
+    )
+    return params, new_opt
+
+
+def valid_dp_sizes(global_batch: int, num_devices: int, model_parallel: int):
+    """Data-parallel sizes an elastic restart may choose from."""
+    out = []
+    for dp in range(1, num_devices // model_parallel + 1):
+        if dp * model_parallel <= num_devices and global_batch % dp == 0:
+            out.append(dp)
+    return out

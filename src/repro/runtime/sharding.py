@@ -1,0 +1,298 @@
+"""Named sharding rules for params, optimizer state, caches and batches.
+
+Megatron-style tensor parallelism over the 'model' axis, data parallelism
+over ('pod','data'), ZeRO-1 optimizer-state sharding over 'data', expert
+parallelism for MoE stacks, and sequence-parallel cache sharding for
+long-context decode.
+
+Rules are name-based over the param tree (the tree layout is owned by
+models/*). Anything unmatched is replicated — XLA SPMD propagation then
+chooses intermediate shardings; non-divisible dims are padded by SPMD
+(DESIGN.md §4).
+
+Layout reminders:
+  dense weight leaves under layers:         (L, ..., K, N)
+  VQ idx (L, ..., C, V, N); codebooks (L, ..., C, d, 2^n); scale (L, ..., N)
+  caches: attention k/v (L, B, S, Hk, hd); MLA latent (L, B, S, r);
+          recurrent states (G, B, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.vq import VQWeight
+
+# output projections back into the residual stream -> row-parallel
+_ROW_KEYS = {"wo", "down", "out"}
+# everything else 2-D under a block is column-parallel
+_REPLICATE_KEYS = {"router", "wr", "w_if", "wi", "wf", "rz", "lam", "cb"}
+
+
+def _dp_axes(mesh: Mesh) -> Tuple:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes
+
+
+def _model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _dim(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape[axis]
+
+
+def _pad_front(spec_tail: Tuple, ndim: int) -> P:
+    return P(*([None] * (ndim - len(spec_tail)) + list(spec_tail)))
+
+
+def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
+                  shard_expert: bool) -> dict:
+    """Specs for one linear param dict ({"w"[,b]} or {"vq"[,b]}).
+
+    jit in_shardings require exact divisibility, so every choice falls
+    back (row <-> col <-> replicate) when the preferred axis does not
+    divide the 'model' mesh dim (e.g. deepseek's d_ff=10944 -> V=1368)."""
+    ma = _model_axis(mesh)
+    mdim = _dim(mesh, ma)
+    out = {}
+
+    def div(x):
+        return ma is not None and x % mdim == 0
+
+    col_ok = True
+    if "w" in node:
+        w = node["w"]
+        nd = w.ndim
+        K, N = w.shape[-2], w.shape[-1]
+        if shard_expert:
+            # (L, E, K, N): shard the expert axis over 'model'
+            out["w"] = _pad_front((ma, None, None), nd)
+        elif row and div(K):
+            out["w"] = _pad_front((ma, None), nd)      # shard K
+        elif div(N):
+            out["w"] = _pad_front((ma,), nd)           # shard N
+            col_ok = True
+            row = False
+        elif div(K):
+            out["w"] = _pad_front((ma, None), nd)
+            row = True
+        else:
+            out["w"] = P(*([None] * nd))
+            col_ok = False
+    if "vq" in node:
+        vq: VQWeight = node["vq"]
+        nd_idx = vq.idx.ndim        # (L.., C, V, N)
+        nd_cb = vq.codebooks.ndim
+        nd_sc = vq.scale.ndim
+        V, N = vq.idx.shape[-2], vq.idx.shape[-1]
+        if shard_expert:
+            lead = nd_idx - 3
+            out["vq"] = VQWeight(
+                idx=_pad_front((ma,) + (None,) * (nd_idx - lead), nd_idx)
+                if lead >= 1 else P(*([None] * nd_idx)),
+                codebooks=_pad_front((ma,) + (None,) * (nd_cb - lead), nd_cb)
+                if lead >= 1 else P(*([None] * nd_cb)),
+                scale=_pad_front((ma,) + (None,) * (nd_sc - lead), nd_sc)
+                if lead >= 1 else P(*([None] * nd_sc)),
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+            )
+        elif row and div(V):
+            # shard V (the K/d axis); lookup partial-sums psum over 'model'
+            out["vq"] = VQWeight(
+                idx=_pad_front((ma, None), nd_idx),
+                codebooks=P(*([None] * nd_cb)),
+                scale=P(*([None] * nd_sc)),
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+            )
+        elif div(N):
+            # shard N: indices and scales column-sharded, OC replicated
+            out["vq"] = VQWeight(
+                idx=_pad_front((ma,), nd_idx),
+                codebooks=P(*([None] * nd_cb)),
+                scale=_pad_front((ma,), nd_sc),
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+            )
+        elif div(V):
+            out["vq"] = VQWeight(
+                idx=_pad_front((ma, None), nd_idx),
+                codebooks=P(*([None] * nd_cb)),
+                scale=P(*([None] * nd_sc)),
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+            )
+        else:
+            out["vq"] = VQWeight(
+                idx=P(*([None] * nd_idx)),
+                codebooks=P(*([None] * nd_cb)),
+                scale=P(*([None] * nd_sc)),
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+            )
+    if "b" in node:
+        b = node["b"]
+        if row or shard_expert or not col_ok or not div(b.shape[-1]):
+            out["b"] = P(*([None] * b.ndim))
+        else:
+            out["b"] = _pad_front((ma,), b.ndim)
+    return out
+
+
+def param_pspecs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching `params`."""
+    ma = _model_axis(mesh)
+    mdim = _dim(mesh, ma)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            # linear param dict?
+            if ("w" in node and not isinstance(node["w"], dict)) or "vq" in node:
+                key = path[-1] if path else ""
+                if key in _REPLICATE_KEYS or (path and path[-2:] and
+                                              path[-1] in _REPLICATE_KEYS):
+                    return jax.tree_util.tree_map(
+                        lambda x: P(*([None] * x.ndim)), node,
+                        is_leaf=lambda x: hasattr(x, "ndim"),
+                    )
+                shard_expert = "experts" in path
+                if shard_expert:
+                    # only shard the expert axis when it divides the mesh
+                    leaf = node["w"] if "w" in node else node["vq"].idx
+                    E = leaf.shape[1] if leaf.ndim >= 4 else 0
+                    if E % max(mdim, 1) != 0:
+                        shard_expert = False  # fall back to feature sharding
+                row = path[-1] in _ROW_KEYS
+                return _linear_specs(node, path[-1], mesh,
+                                     row=row, shard_expert=shard_expert)
+            out = {}
+            for k, v in node.items():
+                if k == "emb":
+                    out[k] = _pad_front((ma, None), v.ndim)  # vocab-sharded
+                elif k == "cw":
+                    out[k] = _pad_front((ma,), v.ndim)       # depthwise conv on d_rnn
+                elif k in _REPLICATE_KEYS and hasattr(v, "ndim"):
+                    out[k] = P(*([None] * v.ndim))
+                elif isinstance(v, dict):
+                    if k in _REPLICATE_KEYS:
+                        out[k] = jax.tree_util.tree_map(
+                            lambda x: P(*([None] * x.ndim)), v,
+                            is_leaf=lambda x: hasattr(x, "ndim"),
+                        )
+                    else:
+                        out[k] = walk(v, path + (k,))
+                elif hasattr(v, "ndim"):
+                    out[k] = P(*([None] * v.ndim))           # norms, gates, lam
+                else:
+                    out[k] = v
+            return out
+        if hasattr(node, "ndim"):
+            return P(*([None] * node.ndim))
+        return node
+
+    return walk(params, ())
+
+
+def opt_pspecs(param_specs: Any, params: Any, mesh: Mesh, *, zero1: bool = True) -> Any:
+    """Optimizer m/v/master specs: param spec + ZeRO-1 sharding of the
+    leading stacked axis over 'data' where it is unsharded."""
+    dset = "data" if "data" in mesh.axis_names else None
+
+    ddim = mesh.shape[dset] if dset else 1
+
+    def one(spec, p):
+        if not isinstance(spec, P):
+            return spec
+        if not zero1 or dset is None or p.ndim < 3:
+            return spec
+        parts = list(spec) + [None] * (p.ndim - len(spec))
+        # shard the leading stacked (layer/group) axis over 'data' when it
+        # divides evenly (jit in_shardings require exact divisibility)
+        if parts[0] is None and p.shape[0] % ddim == 0:
+            parts[0] = dset
+            return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(
+        one, param_specs, params,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_pspecs(batch: Any, mesh: Mesh) -> Any:
+    """Shard the batch (leading) axis of every input over DP axes."""
+    dp = _dp_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(x):
+        if x.ndim == 0:
+            return P()
+        if dp and x.shape[0] % total == 0:
+            return P(dp, *([None] * (x.ndim - 1)))
+        if "data" in mesh.axis_names and x.shape[0] % mesh.shape["data"] == 0:
+            return P("data", *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+_CACHE_TIME_KEYS = {"k", "v", "k_s", "v_s", "latent", "k_rope",
+                    "xk", "xv", "cross_k", "cross_v"}
+
+
+def cache_pspecs(cache: Any, mesh: Mesh) -> Any:
+    """Decode-cache sharding: batch over DP axes when divisible; for
+    unshardable batch (long-context B=1) shard the time axis over 'data'
+    (sequence-parallel decode); heads/feature over 'model' when divisible."""
+    ma = _model_axis(mesh)
+    mdim = _dim(mesh, ma)
+    dp = _dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    ddim = mesh.shape["data"] if "data" in mesh.axis_names else 1
+
+    def leaf_spec(key, x):
+        nd = x.ndim
+        parts = [None] * nd
+        if nd >= 2:
+            B = x.shape[1]
+            if dp and B % dp_total == 0 and B > 1:
+                parts[1] = dp
+            elif "data" in mesh.axis_names and B % ddim == 0 and B > 1:
+                parts[1] = "data"
+        if key in _CACHE_TIME_KEYS and nd >= 3:
+            # Flash-decoding layout: shard the TIME axis over 'model' (and,
+            # when the batch axis is unshardable, over every axis we have).
+            # Attention over an S-sharded cache lowers to local partial
+            # scores + tiny softmax-stat psums — no cache resharding.
+            S = x.shape[2]
+            if parts[1] is None:
+                full = tuple(dp) + ((ma,) if ma else ())
+                fdim = dp_total * mdim
+                if S >= 1024 and full and S % fdim == 0:
+                    parts[2] = full
+                elif ma and S >= 1024 and S % mdim == 0:
+                    parts[2] = ma
+            elif ma and S >= 1024 and S % mdim == 0:
+                parts[2] = ma
+        elif nd >= 3 and ma and x.shape[-1] % mdim == 0 and key not in ("len",):
+            parts[-1] = ma          # recurrent states: shard feature dim
+        return P(*parts)
+
+    def walk(node, key=""):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if hasattr(node, "ndim"):
+            return leaf_spec(key, node)
+        return node
+
+    return walk(cache)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.kvcache import pad_prefill_cache, cache_bytes
+from repro.serve.scheduler import Request, Scheduler

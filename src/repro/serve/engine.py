@@ -1,0 +1,132 @@
+"""Continuous-batching serving engine.
+
+The EVA deployment shape (paper §V-C / Fig. 7(c)): prefill runs per-request
+(INT8 GEMM path), decode runs as one batched step over all active slots so
+every streamed weight-index tile is reused across requests. Slots free up
+as requests finish and queued requests are admitted with a fresh prefill —
+classic continuous batching, expressed with jit-stable shapes (fixed slot
+count, fixed cache capacity).
+
+All caches are batched on axis 1 (axis 0 is the scanned layer/group axis),
+so slot insertion is a tree-wide dynamic_update_slice at index b.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.models.common import RunConfig
+from repro.serve.kvcache import pad_prefill_cache
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _insert_slot(batched: Any, single: Any, b: int) -> Any:
+    """Write a single-request cache (batch size 1 at axis 1) into slot b of
+    the batched cache tree."""
+
+    def one(dst, src):
+        idx = [0] * dst.ndim
+        idx[1] = b
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), tuple(idx))
+
+    return jax.tree_util.tree_map(one, batched, single)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 4
+    max_len: int = 256
+    greedy: bool = True
+    eos_id: int = -1              # <0: run to max_new_tokens
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, rc: RunConfig,
+                 ecfg: EngineConfig, extras: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.params = params
+        self.rc = rc
+        self.ecfg = ecfg
+        self.extras = extras or {}
+        self.sched = Scheduler(ecfg.num_slots)
+        cfg = model.cfg
+        self.window = cfg.sliding_window or cfg.local_window
+        self.caches = model.init_cache(ecfg.num_slots, ecfg.max_len)
+        self.positions = np.zeros((ecfg.num_slots,), np.int64)
+        self.last_token = np.zeros((ecfg.num_slots,), np.int64)
+
+        self._decode_fn = jax.jit(
+            functools.partial(self._decode_impl, rc=rc.replace(mode="decode")),
+        )
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_one(self, slot: int, req: Request):
+        rc_p = self.rc.replace(mode="prefill")
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        for k, v in self.extras.items():
+            batch[k] = v[None] if v.ndim == 2 else v[:1]
+        logits, cache = self.model.prefill(self.params, batch, rc_p)
+        cache = pad_prefill_cache(
+            cache, self.ecfg.max_len, window=self.window
+        )
+        self.caches = _insert_slot(self.caches, cache, slot)
+        tok = int(np.argmax(np.asarray(logits[0, -1])))
+        req.generated.append(tok)
+        self.positions[slot] = req.prompt_len
+        self.last_token[slot] = tok
+
+    # -------------------------------------------------------------- decode
+    def _decode_impl(self, params, tokens, positions, caches, *, rc):
+        logits, new_caches = self.model.decode(params, tokens, positions, caches, rc)
+        next_tok = jnp.argmax(logits[:, 0, : self.model.cfg.vocab_size], axis=-1)
+        return next_tok, new_caches
+
+    def step(self) -> List[Request]:
+        """One engine tick: admit+prefill new requests, one batched decode
+        step, retire finished requests. Returns finished requests."""
+        for slot in self.sched.admit():
+            self._prefill_one(slot, self.sched.slots[slot])
+
+        active = self.sched.active_slots()
+        finished: List[Request] = []
+        if active:
+            tokens = jnp.asarray(self.last_token[:, None], jnp.int32)
+            positions = jnp.asarray(self.positions[:, None], jnp.int32)
+            next_tok, self.caches = self._decode_fn(
+                self.params, tokens, positions, self.caches
+            )
+            next_tok = np.asarray(next_tok)
+            for b in active:
+                req = self.sched.slots[b]
+                self.positions[b] += 1
+                # request finished BEFORE consuming this step's token?
+                if len(req.generated) >= req.max_new_tokens or (
+                    self.ecfg.eos_id >= 0 and req.generated
+                    and req.generated[-1] == self.ecfg.eos_id
+                ):
+                    finished.append(self.sched.finish(b))
+                    continue
+                req.generated.append(int(next_tok[b]))
+                self.last_token[b] = int(next_tok[b])
+        return finished
+
+    # ---------------------------------------------------------- high level
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int
+                 ) -> Dict[int, List[int]]:
+        uids = [self.sched.submit(p, max_new_tokens) for p in prompts]
+        results: Dict[int, List[int]] = {}
+        guard = 0
+        while not self.sched.idle:
+            for req in self.step():
+                results[req.uid] = req.generated[:req.max_new_tokens]
+            guard += 1
+            if guard > 100000:  # pragma: no cover
+                raise RuntimeError("engine did not converge")
+        # order results by submission
+        return {u: results[u] for u in uids}

@@ -1,0 +1,78 @@
+"""KV/state-cache utilities for serving.
+
+Families store different cache structures (full KV, SWA/local ring
+buffers, MLA latent caches, RG-LRU / xLSTM recurrent states). The engine
+needs one operation over all of them: convert the variable-length caches
+returned by prefill into fixed-capacity decode caches.
+
+Conventions (see models/*.init_cache):
+  {"k","v","len"}            attention cache, time axis -3 (ring iff window)
+  {"latent","k_rope","len"}  MLA cache, time axis -2
+  {"xk","xv","xlen"} / {"cross_k","cross_v","cross_len"}   static memories
+  anything else              recurrent state, already fixed-size
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_time(x: jax.Array, axis: int, capacity: int) -> jax.Array:
+    S = x.shape[axis]
+    if S == capacity:
+        return x
+    if S > capacity:
+        raise ValueError(f"prefill length {S} exceeds capacity {capacity}")
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, capacity - S)
+    return jnp.pad(x, pad)
+
+
+def _to_ring(x: jax.Array, axis: int, window: int) -> jax.Array:
+    """Reorder the last `window` positions of a full-length cache into ring
+    order (slot = position % window)."""
+    S = x.shape[axis]
+    if S <= window:
+        return _pad_time(x, axis, window)
+    s = jnp.arange(window)
+    pos = S - window + ((s - (S - window)) % window)
+    return jnp.take(x, pos, axis=axis)
+
+
+def pad_prefill_cache(cache: Any, capacity: int, *, window: int = 0) -> Any:
+    """Walk the cache tree and pad/ring-convert every attention cache to
+    its decode capacity. Recurrent states and static cross memories pass
+    through unchanged."""
+    eff_cap = min(capacity, window) if window else capacity
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and "len" in node:
+                out = dict(node)
+                fix = _to_ring if window else _pad_time
+                arg = window if window else eff_cap
+                out["k"] = fix(node["k"], node["k"].ndim - 3, arg)
+                out["v"] = fix(node["v"], node["v"].ndim - 3, arg)
+                for s in ("k_s", "v_s"):  # int8-cache scales: (.., S, Hk)
+                    if s in node:
+                        out[s] = fix(node[s], node[s].ndim - 2, arg)
+                return out
+            if "latent" in node and "k_rope" in node:
+                out = dict(node)
+                out["latent"] = _pad_time(node["latent"], node["latent"].ndim - 2, eff_cap)
+                out["k_rope"] = _pad_time(node["k_rope"], node["k_rope"].ndim - 2, eff_cap)
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache)
+
+
+def cache_bytes(cache: Any) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(cache)
+        if hasattr(x, "size")
+    )

@@ -1,0 +1,70 @@
+"""Request scheduler for continuous batching.
+
+Requests arrive with a prompt and a max_new_tokens budget; the scheduler
+admits them into free decode slots (paper §V-C: EU-stage weight-tile reuse
+across requests is what makes multi-batch decode cheap — the engine keeps
+slots as full as possible so every streamed WI tile is reused by all
+active requests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class Scheduler:
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self._uid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return self._uid
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self) -> List[int]:
+        """Move queued requests into free slots; returns slot indices that
+        need prefill."""
+        admitted = []
+        for i in self.free_slots():
+            if not self.queue:
+                break
+            self.slots[i] = self.queue.popleft()
+            admitted.append(i)
+        return admitted
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def finish(self, slot: int) -> Request:
+        r = self.slots[slot]
+        assert r is not None
+        r.done = True
+        self.slots[slot] = None
+        return r
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active_slots()

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# src/ layout import path (tests run with PYTHONPATH=src, but make it robust)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Release compiled executables between test modules — the suite
+    compiles thousands of programs and XLA:CPU's JIT'd code is otherwise
+    retained for the whole process (LLVM eventually OOMs)."""
+    yield
+    jax.clear_caches()

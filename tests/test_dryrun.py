@@ -1,0 +1,53 @@
+"""Dry-run regression guard: lower+compile one (arch x shape) cell on both
+production meshes inside a 512-device subprocess, and check the recorded
+roofline structure. Keeps the multi-pod path from silently regressing."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    from repro.launch.dryrun import run_cell
+
+    out_dir = sys.argv[1]
+    results = {}
+    for mesh in ("single", "multi"):
+        r = run_cell("qwen3_0_6b", "decode_32k", mesh, out_dir)
+        results[mesh] = {
+            "status": r["status"],
+            "chips": r.get("chips"),
+            "bottleneck": r.get("roofline", {}).get("bottleneck"),
+            "t_memory": r.get("roofline", {}).get("t_memory"),
+        }
+    print("RESULT" + json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_on_both_meshes(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC, TF_CPP_MIN_LOG_LEVEL="2")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(tmp_path)], env=env,
+        capture_output=True, text=True, timeout=560,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][-1]
+    res = json.loads(line[len("RESULT"):])
+    assert res["single"]["status"] == "ok", res
+    assert res["multi"]["status"] == "ok", res
+    assert res["single"]["chips"] == 256 and res["multi"]["chips"] == 512
+    # decode must be memory-bound (EVA's expected physics) on this arch
+    assert res["single"]["bottleneck"] == "memory", res
+    # multi-pod shards the decode batch further -> lower memory term
+    assert res["multi"]["t_memory"] < res["single"]["t_memory"]
+    # artifacts written
+    files = os.listdir(tmp_path)
+    assert any("pod1" in f for f in files) and any("pod2" in f for f in files)

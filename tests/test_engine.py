@@ -1,0 +1,93 @@
+"""Serving-engine tests: continuous batching correctness and scheduling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models.common import RunConfig
+from repro.serve import Engine, EngineConfig, Scheduler
+from repro.serve.kvcache import pad_prefill_cache
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _greedy_reference(model, params, prompt, max_new, rc, cap):
+    """Sequential single-request greedy decode."""
+    cfg = model.cfg
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None], jnp.int32)},
+        rc.replace(mode="prefill"),
+    )
+    window = cfg.sliding_window or cfg.local_window
+    caches = pad_prefill_cache(caches, cap, window=window)
+    out = [int(np.argmax(np.asarray(logits[0, -1, :cfg.vocab_size])))]
+    pos = len(prompt)
+    while len(out) < max_new:
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, caches = model.decode(
+            params, tok, jnp.asarray([[pos]], jnp.int32), caches,
+            rc.replace(mode="decode"),
+        )
+        out.append(int(np.argmax(np.asarray(logits[0, 0, :cfg.vocab_size]))))
+        pos += 1
+    return out
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke_config("llama2_7b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rc = RunConfig(mode="decode", remat=False, attn_chunk=16)
+    return cfg, model, params, rc
+
+
+def test_continuous_batching_matches_sequential(setup):
+    cfg, model, params, rc = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 9, 7, 4, 6)]
+    max_new = 6
+    ecfg = EngineConfig(num_slots=2, max_len=32)  # slots < requests: queueing
+    eng = Engine(model, params, rc, ecfg)
+    got = eng.generate(prompts, max_new)
+    for uid, prompt in zip(got, prompts):
+        ref = _greedy_reference(model, params, prompt, max_new, rc, 32)
+        assert got[uid] == ref, (uid, got[uid], ref)
+
+
+def test_scheduler_slot_lifecycle():
+    s = Scheduler(num_slots=2)
+    u1 = s.submit(np.ones(3, np.int32), 4)
+    u2 = s.submit(np.ones(4, np.int32), 4)
+    u3 = s.submit(np.ones(5, np.int32), 4)
+    admitted = s.admit()
+    assert len(admitted) == 2 and len(s.queue) == 1
+    r = s.finish(admitted[0])
+    assert r.uid == u1
+    assert s.admit() == [admitted[0]]  # freed slot reused for u3
+    assert not s.idle
+    s.finish(0), s.finish(1)
+    assert s.idle
+
+
+def test_engine_vq_quantized(setup):
+    """The engine runs end-to-end on EVA-quantized weights."""
+    cfg, model, params, rc = setup
+    qparams = model.quantize(params, method="synthetic", key=KEY)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(3)]
+    rc_vq = rc.replace(vq_mode="eva")
+    eng = Engine(model, qparams, rc_vq, EngineConfig(num_slots=3, max_len=24))
+    got = eng.generate(prompts, 4)
+    assert all(len(v) == 4 for v in got.values())
+    # eva and dequant paths agree token-for-token
+    eng2 = Engine(model, qparams, rc.replace(vq_mode="dequant"),
+                  EngineConfig(num_slots=3, max_len=24))
+    got2 = eng2.generate(prompts, 4)
+    assert list(got.values()) == list(got2.values())

@@ -1,0 +1,100 @@
+"""Model-level quantization pass: eligibility, structure, compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.quantize import (
+    compressed_model_bytes, count_vq_layers, quantize_params,
+)
+from repro.core.vq import VQWeight
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(arch="llama2_7b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+class TestEligibility:
+    def test_fc_layers_quantized_embeddings_not(self):
+        cfg, model, params = _params()
+        q = quantize_params(params, cfg, method="synthetic", key=KEY)
+        assert count_vq_layers(q) > 0
+        # embedding and lm_head stay dense
+        assert "emb" in q["embedding"]
+        assert "w" in q["lm_head"]
+        # attention + mlp projections quantized
+        assert isinstance(q["layers"]["attn"]["wq"]["vq"], VQWeight)
+        assert isinstance(q["layers"]["mlp"]["down"]["vq"], VQWeight)
+        # norms untouched
+        assert "g" in q["final_norm"]
+
+    def test_moe_experts_quantized_router_not(self):
+        cfg, model, params = _params("mixtral_8x22b")
+        q = quantize_params(params, cfg, method="synthetic", key=KEY)
+        moe = q["layers"]["moe"]
+        assert isinstance(moe["experts"]["gate"]["vq"], VQWeight)
+        assert "wr" in moe["router"]  # router stays dense
+        # stacked leading dims preserved: (L, E, C, V, N)
+        assert moe["experts"]["gate"]["vq"].idx.ndim == 5
+
+    def test_gates_and_recurrence_not_quantized(self):
+        cfg, model, params = _params("xlstm_125m")
+        q = quantize_params(params, cfg, method="synthetic", key=KEY)
+        g0 = q["groups"]["b0_mlstm"]
+        assert "w" in g0["w_if"]          # per-head gates stay dense
+        assert isinstance(g0["wq"]["vq"], VQWeight)
+        g1 = q["groups"]["b1_slstm"]
+        assert "rz" in g1                  # recurrent weights untouched
+
+
+class TestStructure:
+    def test_idempotent(self):
+        cfg, model, params = _params()
+        q1 = quantize_params(params, cfg, method="synthetic", key=KEY)
+        q2 = quantize_params(q1, cfg, method="synthetic", key=KEY)
+        assert count_vq_layers(q1) == count_vq_layers(q2)
+
+    def test_specs_mode_matches_synthetic_structure(self):
+        cfg, model, params = _params()
+        spec_tree = quantize_params(jax.eval_shape(lambda: params), cfg,
+                                    method="specs")
+        syn_tree = quantize_params(params, cfg, method="synthetic", key=KEY)
+        s_leaves = jax.tree_util.tree_leaves(spec_tree)
+        y_leaves = jax.tree_util.tree_leaves(syn_tree)
+        assert len(s_leaves) == len(y_leaves)
+        for s, y in zip(s_leaves, y_leaves):
+            assert s.shape == y.shape and s.dtype == y.dtype
+
+    def test_compression_ratio(self):
+        cfg, model, params = _params()
+        q = quantize_params(params, cfg, method="synthetic", key=KEY)
+        vq_bytes, dense_bytes = compressed_model_bytes(q)
+        # q = C*n/d = 2 bits/weight vs bf16 -> ~1/8 (+ codebook overhead,
+        # large on smoke-size layers)
+        assert vq_bytes < dense_bytes * 0.5
+        assert vq_bytes > dense_bytes * 0.1
+
+    def test_fit_matches_dequant_quality(self):
+        """fit on real weights reconstructs better than synthetic junk."""
+        from repro.core.vq import dequantize
+        cfg, model, params = _params()
+        cfg2 = dataclasses.replace(cfg, vq_n=6)
+        qf = quantize_params(params, cfg2, method="fit", key=KEY)
+        vq = qf["layers"]["mlp"]["gate"]["vq"]
+        W = params["layers"]["mlp"]["gate"]["w"]  # (L, K, N)
+        errs = []
+        for l in range(W.shape[0]):
+            wl = np.asarray(W[l])
+            vql = VQWeight(idx=vq.idx[l], codebooks=vq.codebooks[l],
+                           scale=vq.scale[l], K=vq.K, N=vq.N, d=vq.d, n=vq.n)
+            w_hat = np.asarray(dequantize(vql))
+            errs.append(np.linalg.norm(wl - w_hat) / np.linalg.norm(wl))
+        assert max(errs) < 0.9  # random-gaussian bound; structured << this

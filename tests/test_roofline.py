@@ -1,0 +1,140 @@
+"""Roofline tooling: HLO parser correctness on programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import analyze, parse_hlo
+from repro.roofline.analysis import (
+    HBM_BW, LINK_BW, PEAK_FLOPS, RooflineReport, model_flops,
+)
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+class TestHloParser:
+    def test_plain_dot_flops(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        c = _compile(lambda x, y: x @ y, a, b)
+        got = analyze(c.as_text()).flops
+        assert got == 2 * 64 * 128 * 32
+
+    def test_scan_trip_count_multiplies(self):
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            return jax.lax.scan(body, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+        ws = jax.ShapeDtypeStruct((7, 32, 32), jnp.float32)
+        got = analyze(_compile(f, x, ws).as_text()).flops
+        assert got == 7 * 2 * 16 * 32 * 32
+
+    def test_grad_of_scan_counts_backward(self):
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            return jax.lax.scan(body, x, ws)[0].sum()
+
+        x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+        ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+        got = analyze(_compile(jax.grad(f, argnums=1), x, ws).as_text()).flops
+        base = 5 * 2 * 16 * 32 * 32
+        assert got == pytest.approx(3 * base)
+
+    def test_batched_dot(self):
+        a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+        got = analyze(_compile(lambda x, y: jnp.einsum("bij,bjk->bik", x, y),
+                               a, b).as_text()).flops
+        assert got == 2 * 4 * 8 * 16 * 8
+
+    def test_nested_while(self):
+        def f(x, ws):
+            def outer(c, w):
+                def inner(ci, _):
+                    return jnp.tanh(ci @ w), None
+                return jax.lax.scan(inner, c, None, length=3)[0], None
+            return jax.lax.scan(outer, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        ws = jax.ShapeDtypeStruct((4, 16, 16), jnp.float32)
+        got = analyze(_compile(f, x, ws).as_text()).flops
+        assert got == 4 * 3 * 2 * 8 * 16 * 16
+
+    def test_parse_hlo_finds_entry(self):
+        c = _compile(lambda x: x + 1, jax.ShapeDtypeStruct((4,), jnp.float32))
+        comps, entry = parse_hlo(c.as_text())
+        assert entry is not None and entry in comps
+
+
+class TestCollectiveParsing:
+    def test_psum_bytes_multi_device(self):
+        """Compile an 8-way psum in a subprocess-free way: use the parser
+        on a handcrafted HLO snippet (device count is 1 in-process)."""
+        hlo = """
+ENTRY %main.1 (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  ROOT %all-reduce.1 = f32[1024]{0} all-reduce(%p0), replica_groups=[1,8]<=[8], to_apply=%add.1
+}
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+"""
+        got = analyze(hlo)
+        assert got.collective_counts == {"all-reduce": 1}
+        # ring model: 2 * bytes * (g-1)/g
+        assert got.collective_bytes == int(2 * 1024 * 4 * 7 / 8)
+
+    def test_collective_in_while_multiplied(self):
+        hlo = """
+ENTRY %main.1 (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %tuple.1 = (s32[], f32[64]{0}) tuple(%c0, %p0)
+  %while.1 = (s32[], f32[64]{0}) while(%tuple.1), condition=%cond.1, body=%body.1
+  ROOT %gte.9 = f32[64]{0} get-tuple-element(%while.1), index=1
+}
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]{0}) parameter(0)
+  %g = f32[64]{0} get-tuple-element(%p), index=1
+  %ar = f32[64]{0} all-gather(%g), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %t = (s32[], f32[64]{0}) tuple(%i, %ar)
+}
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+"""
+        got = analyze(hlo)
+        assert got.collective_counts == {"all-gather": 12}
+        assert got.collective_bytes == 12 * int(64 * 4 * 3 / 4)
+
+
+class TestReport:
+    def test_bottleneck_selection(self):
+        r = RooflineReport(
+            arch="a", shape="s", mesh="m", chips=256,
+            flops_per_device=PEAK_FLOPS,      # 1 s compute
+            hbm_bytes_per_device=HBM_BW / 2,  # 0.5 s memory
+            collective_bytes_per_device=LINK_BW / 4,
+            collective_breakdown={}, argument_bytes=0, output_bytes=0,
+            temp_bytes=0, model_flops=PEAK_FLOPS * 256 / 2,
+        ).finalize()
+        assert r.bottleneck == "compute"
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.useful_ratio == pytest.approx(0.5)
+        assert r.bound_time == pytest.approx(1.0)
+
+    def test_model_flops(self):
+        # train: 6 * N * tokens ; decode: 2 * N_active * batch
+        assert model_flops(None, "train", 4096, 256, 1e9) \
+            == 6 * 1e9 * 4096 * 256
+        assert model_flops(None, "decode", 32768, 128, 1e9, 0.25e9) \
+            == 2 * 0.25e9 * 128

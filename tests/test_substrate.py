@@ -1,0 +1,173 @@
+"""Substrate tests: optimizer, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.vq import synthetic_vq
+from repro.data import DataConfig, DataPipeline, global_batch_at
+from repro.optim import (
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+    constant, warmup_cosine, warmup_linear,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"x": jnp.zeros(3)}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+        opt = adamw_init(params, cfg)
+        for _ in range(200):
+            grads = jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2))(params)
+            params, opt, _ = adamw_update(grads, opt, params, cfg)
+        np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target),
+                                   atol=1e-2)
+
+    def test_master_weights_beat_bf16_updates(self):
+        """fp32 master accumulates updates far below bf16 resolution."""
+        params = {"x": jnp.ones(8, jnp.bfloat16)}
+        cfg = AdamWConfig(lr=1e-5, weight_decay=0.0, grad_clip=0.0,
+                          use_master=True)
+        opt = adamw_init(params, cfg)
+        g = {"x": jnp.ones(8, jnp.float32)}
+        for _ in range(100):
+            params, opt, _ = adamw_update(g, opt, params, cfg)
+        # master moved ~1e-3; bf16 param tracks the master, not stuck at 1.0
+        assert float(jnp.max(jnp.abs(opt.master["x"] - 1.0))) > 5e-4
+        assert np.all(np.isfinite(np.asarray(params["x"], np.float32)))
+
+    def test_grad_clip(self):
+        g = {"x": jnp.full(4, 100.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(jnp.linalg.norm(clipped["x"])) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedules(self):
+        assert float(warmup_cosine(0, warmup_steps=10, total_steps=100)) == 0.0
+        assert float(warmup_cosine(10, warmup_steps=10, total_steps=100)) \
+            == pytest.approx(1.0)
+        assert float(warmup_cosine(100, warmup_steps=10, total_steps=100)) \
+            == pytest.approx(0.1)
+        assert float(warmup_linear(100, warmup_steps=10, total_steps=100)) \
+            == pytest.approx(0.0)
+        assert float(constant(7)) == 1.0
+
+
+class TestDataPipeline:
+    CFG = DataConfig(vocab_size=64, seq_len=8, global_batch=8, seed=3)
+
+    def test_deterministic_across_restarts(self):
+        a = global_batch_at(self.CFG, 5)
+        b = global_batch_at(self.CFG, 5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_shift(self):
+        b = global_batch_at(self.CFG, 0)
+        g = _batch_raw(self.CFG, 0)
+        np.testing.assert_array_equal(b["tokens"], g[:, :-1])
+        np.testing.assert_array_equal(b["labels"], g[:, 1:])
+
+    def test_shards_partition_global_batch(self):
+        g = global_batch_at(self.CFG, 2)
+        shards = []
+        for r in range(4):
+            p = DataPipeline(self.CFG, dp_rank=r, dp_size=4, start_step=2,
+                             prefetch=1)
+            shards.append(next(p)["tokens"])
+            p.close()
+        np.testing.assert_array_equal(np.concatenate(shards, 0), g["tokens"])
+
+    @settings(max_examples=5, deadline=None)
+    @given(dp=st.sampled_from([1, 2, 4, 8]), step=st.integers(0, 20))
+    def test_elastic_resharding_invariance(self, dp, step):
+        """Any dp_size partitions the same global stream."""
+        g = global_batch_at(self.CFG, step)["tokens"]
+        per = self.CFG.global_batch // dp
+        for r in range(dp):
+            p = DataPipeline(self.CFG, dp_rank=r, dp_size=dp, start_step=step)
+            got = next(p)["tokens"]
+            p.close()
+            np.testing.assert_array_equal(got, g[r * per:(r + 1) * per])
+
+    def test_failure_injection(self):
+        p = DataPipeline(self.CFG, fail_at=2)
+        next(p), next(p)
+        with pytest.raises(RuntimeError, match="injected data failure"):
+            next(p)
+        p.close()
+
+    def test_task_is_learnable(self):
+        """The affine task has real structure: next token is a deterministic
+        function of the previous one ~95% of the time."""
+        b = global_batch_at(self.CFG, 0)
+        toks, labs = b["tokens"], b["labels"]
+        pred = (toks * 31 + 17) % self.CFG.vocab_size
+        agree = (pred == labs).mean()
+        assert agree > 0.85
+
+
+def _batch_raw(cfg, step):
+    from repro.data.pipeline import _batch_for_step
+    return _batch_for_step(cfg, step)
+
+
+class TestCheckpoint:
+    def _state(self):
+        params = {
+            "layers": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "vq": synthetic_vq(KEY, 32, 16, d=8, n=4, C=2)},
+            "none_field": None,
+        }
+        opt = adamw_init({"layers": {"w": params["layers"]["w"]}},
+                         AdamWConfig(use_master=True))
+        return {"params": params, "opt": opt,
+                "extra": {"step": jnp.asarray(7)}}
+
+    def test_roundtrip_bit_exact(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        state = self._state()
+        mgr.save(7, state)
+        step, restored = mgr.restore()
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # structure match (VQWeight + AdamWState rebuilt)
+        assert jax.tree_util.tree_structure(state) \
+            == jax.tree_util.tree_structure(restored)
+
+    def test_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"params": {"x": jnp.ones(2) * s}})
+        assert mgr.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+        mgr.save(1, {"params": {"x": jnp.ones(4)}})
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_tmp_dirs_are_not_valid_checkpoints(self, tmp_path):
+        """A crash mid-write must never surface a half checkpoint."""
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        os.makedirs(tmp_path / "step_0000000005.tmp")
+        (tmp_path / "step_0000000005.tmp" / "params.npz").write_bytes(b"junk")
+        assert mgr.latest_step() is None
+        # a directory without MANIFEST is also invalid
+        os.makedirs(tmp_path / "step_0000000006")
+        assert mgr.latest_step() is None
+
+    def test_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        for s in (1, 2, 3):
+            mgr.save(s, {"params": {"x": jnp.ones(2) * s}})
+        step, st = mgr.restore(2)
+        assert step == 2 and float(st["params"]["x"][0]) == 2.0

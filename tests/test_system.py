@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests for the full system: train a small model to
+convergence on the synthetic task, serve it quantized, and check the
+framework-level invariants tie together."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import serve
+from repro.launch.train import train
+from repro.models import build_model
+from repro.models.common import RunConfig
+
+
+def test_train_learns_synthetic_task(tmp_path):
+    """The affine next-token task is learnable: loss falls well below the
+    uniform baseline ln(V)."""
+    out = train("qwen3-0.6b", smoke=True, steps=40, seq_len=32,
+                global_batch=8, lr=3e-3, ckpt_dir=str(tmp_path),
+                ckpt_every=20, log_every=0)
+    losses = [out["losses"][s] for s in sorted(out["losses"])]
+    v = get_smoke_config("qwen3-0.6b").vocab_size
+    assert losses[0] > 0.8 * np.log(v)
+    assert losses[-1] < 0.6 * losses[0], (losses[0], losses[-1])
+
+
+def test_serve_end_to_end_vq():
+    out = serve("llama2-7b", smoke=True, requests=4, max_new=5,
+                num_slots=2, vq_mode="eva", quantize=True)
+    assert len(out["results"]) == 4
+    assert all(len(v) == 5 for v in out["results"].values())
+
+
+def test_quantize_then_serve_trained_model(tmp_path):
+    """The full paper pipeline: train dense -> VQ-quantize -> EVA decode.
+    The quantized model's decode stays close to the dense model on a
+    trained (structured) network."""
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), dtype="float32")
+    model = build_model(cfg)
+    # train briefly so the weights have structure
+    from repro.data import DataConfig, global_batch_at
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=3e-3)
+    opt = adamw_init(params, ocfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=24, global_batch=8)
+    rc = RunConfig(mode="train", remat=False, attn_chunk=8)
+    for step in range(15):
+        batch = {k: jnp.asarray(v) for k, v in global_batch_at(dcfg, step).items()}
+        grads = jax.grad(lambda p: model.loss(p, batch, rc))(params)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+
+    qparams = model.quantize(params, method="fit", key=jax.random.PRNGKey(1))
+    batch = {k: jnp.asarray(v) for k, v in global_batch_at(dcfg, 99).items()}
+    dense_loss = float(model.loss(params, batch, rc))
+    vq_loss = float(model.loss(
+        qparams, batch, rc.replace(vq_mode="eva")))
+    # C=2 (2-bit) quantization degrades, but the model must stay usable
+    # (paper Tbl. V: VQ keeps 2-bit models functional where RTN collapses)
+    assert np.isfinite(vq_loss)
+    assert vq_loss < np.log(cfg.vocab_size) * 1.2
+    assert dense_loss <= vq_loss

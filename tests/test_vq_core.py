@@ -1,0 +1,157 @@
+"""Core VQ properties: quantizer behaviour and the EVA reformulation's
+exactness (paper: 'preserving arithmetic precision after VQ')."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops
+from repro.core.vq import (
+    VQWeight, dequantize, fit_vq, kmeans, reconstruction_error, synthetic_vq,
+    vq_specs,
+)
+
+
+class TestKMeans:
+    def test_assignment_is_nearest(self):
+        key = jax.random.PRNGKey(0)
+        pts = jax.random.normal(key, (256, 4))
+        cents, assign = kmeans(key, pts, 16, iters=10)
+        d2 = np.sum((np.asarray(pts)[:, None] - np.asarray(cents)[None]) ** 2, -1)
+        np.testing.assert_array_equal(np.asarray(assign), d2.argmin(1))
+
+    def test_no_dead_centroids_on_clusterable_data(self):
+        key = jax.random.PRNGKey(1)
+        centers = jax.random.normal(key, (8, 4)) * 10
+        pts = centers[jax.random.randint(key, (512,), 0, 8)]
+        pts += 0.01 * jax.random.normal(key, (512, 4))
+        cents, assign = kmeans(key, pts, 8, iters=25)
+        assert len(np.unique(np.asarray(assign))) == 8
+        assert np.all(np.isfinite(np.asarray(cents)))
+
+
+class TestFitVQ:
+    def test_residual_error_decreases_with_C(self):
+        key = jax.random.PRNGKey(0)
+        W = jax.random.normal(key, (128, 96)) * 0.1
+        errs = []
+        for C in (1, 2, 3):
+            vq = fit_vq(key, W, d=8, n=6, C=C, kmeans_iters=8, refine_rounds=0)
+            errs.append(float(reconstruction_error(W, vq)))
+        assert errs[0] > errs[1] > errs[2], errs
+
+    def test_structured_weights_compress_well(self):
+        # weights drawn from a small set of prototype vectors -> near-exact
+        key = jax.random.PRNGKey(2)
+        protos = jax.random.normal(key, (16, 8))
+        idx = jax.random.randint(key, (64 // 8 * 48,), 0, 16)
+        W = protos[idx].reshape(8, 48, 8).transpose(0, 2, 1).reshape(64, 48)
+        vq = fit_vq(key, W, d=8, n=4, C=1, kmeans_iters=25, refine_rounds=0)
+        # per-column scaling keeps this from being exactly 16 prototypes,
+        # but structured weights compress far better than gaussian (~0.73)
+        assert float(reconstruction_error(W, vq)) < 0.12
+
+    def test_shapes_and_dtypes(self):
+        key = jax.random.PRNGKey(0)
+        vq = fit_vq(key, jnp.ones((64, 32)), d=8, n=8, C=2, kmeans_iters=2)
+        assert vq.idx.shape == (2, 8, 32) and vq.idx.dtype == jnp.uint8
+        assert vq.codebooks.shape == (2, 8, 256)
+        assert vq.scale.shape == (32,)
+        assert vq.bits_per_weight == 2.0
+
+    def test_compressed_bytes_ratio(self):
+        vq = synthetic_vq(jax.random.PRNGKey(0), 4096, 4096, d=8, n=8, C=2)
+        dense_bf16 = 4096 * 4096 * 2
+        ratio = vq.compressed_bytes() / dense_bf16
+        # 2 bits/weight vs 16 -> ~1/8 plus codebook/scale overhead
+        assert 0.12 < ratio < 0.14, ratio
+
+
+class TestEquivalence:
+    """EVA matmul == dequantized matmul (the paper's core exactness claim)."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        V=st.integers(2, 12),
+        N=st.integers(3, 50),
+        M=st.integers(1, 5),
+        d=st.sampled_from([4, 8]),
+        n=st.sampled_from([2, 4, 8]),
+        C=st.integers(1, 4),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_eva_equals_dequant(self, V, N, M, d, n, C, seed):
+        key = jax.random.PRNGKey(seed)
+        K = V * d
+        vq = synthetic_vq(key, K, N, d=d, n=n, C=C)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (M, K))
+        y_eva = ops.eva_matmul(x, vq, block_v=5)
+        y_deq = ops.dequant_matmul(x, vq)
+        np.testing.assert_allclose(np.asarray(y_eva), np.asarray(y_deq),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_eva_with_fitted_weights(self):
+        key = jax.random.PRNGKey(3)
+        W = jax.random.normal(key, (64, 48)) * 0.3
+        vq = fit_vq(key, W, d=8, n=5, C=2, kmeans_iters=6, refine_rounds=1)
+        x = jax.random.normal(key, (3, 64))
+        np.testing.assert_allclose(
+            np.asarray(ops.eva_matmul(x, vq)),
+            np.asarray(ops.dequant_matmul(x, vq)),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_output_codebook_shape(self):
+        vq = synthetic_vq(jax.random.PRNGKey(0), 64, 32, d=8, n=4, C=3)
+        O = ops.compute_output_codebook(jnp.ones((5, 64)), vq)
+        assert O.shape == (3, 5, 8, 16)
+
+
+class TestComputeCollapse:
+    """Paper §III-B advantage 3: VQ-GEMM needs N/2^n x fewer MACs."""
+
+    def test_ratio(self):
+        assert ops.compute_collapse_ratio(4096, 8) == 16.0
+
+    def test_mac_counts(self):
+        M, K, N, d, n, C = 1, 4096, 4096, 8, 8, 2
+        gemv = ops.gemv_macs(M, K, N)
+        vqg = ops.vq_gemm_macs(M, K, n, C, d)
+        # per codebook: K*2^n; two codebooks -> ratio N/(C*2^n)
+        assert gemv / vqg == N / (C * 2 ** n)
+
+    def test_hlo_flops_collapse(self):
+        """The compiled OC GEMM really is independent of N."""
+        key = jax.random.PRNGKey(0)
+        x = jnp.ones((1, 512))
+        small = synthetic_vq(key, 512, 256, d=8, n=8, C=1)
+        big = synthetic_vq(key, 512, 4096, d=8, n=8, C=1)
+        f_small = jax.jit(ops.compute_output_codebook).lower(x, small).compile()
+        f_big = jax.jit(ops.compute_output_codebook).lower(x, big).compile()
+        assert f_small.cost_analysis()["flops"] == f_big.cost_analysis()["flops"]
+
+
+class TestInt8:
+    def test_int8_matmul_close(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (4, 128))
+        w = jax.random.normal(key, (128, 64)) * 0.1
+        y = ops.int8_matmul(x, w)
+        ref = np.asarray(x) @ np.asarray(w)
+        rel = np.abs(np.asarray(y) - ref).max() / np.abs(ref).max()
+        assert rel < 0.03
+
+    def test_quantize_int8_range(self):
+        q, s = ops.quantize_int8(jnp.linspace(-3, 3, 128)[None])
+        assert q.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(q))) == 127
+
+
+class TestSpecs:
+    def test_vq_specs_match_synthetic(self):
+        spec = vq_specs(128, 64, d=8, n=8, C=2)
+        real = synthetic_vq(jax.random.PRNGKey(0), 128, 64, d=8, n=8, C=2)
+        for s, r in zip(jax.tree_util.tree_leaves(spec),
+                        jax.tree_util.tree_leaves(real)):
+            assert s.shape == r.shape and s.dtype == r.dtype
