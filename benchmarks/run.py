@@ -3,21 +3,24 @@
 Prints ``name,us_per_call,derived`` CSV rows. The analytic accelerator
 model (accel_model.py) mirrors the paper's simulator; `measured/*` rows
 are real wall-clock CPU executions of the JAX ops.
+
+Usage:
+    python -m benchmarks.run              # every module
+    python -m benchmarks.run measured     # just the named module(s)
 """
 from __future__ import annotations
 
 import sys
 import traceback
+from typing import Optional, Sequence
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     from benchmarks import (
         fig8_dse, fig10_decode, fig11_batch, fig12_e2e, fig14_spurious,
         measured, tbl_iii_vq_configs, tbl_v_accuracy_proxy,
         tbl_viii_throughput, tbl_x_oc_advantage,
     )
-
-    print("name,us_per_call,derived")
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.3f},{derived}", flush=True)
@@ -34,8 +37,17 @@ def main() -> None:
         ("tbl_v", tbl_v_accuracy_proxy),
         ("measured", measured),
     ]
+    selected = set(sys.argv[1:] if argv is None else argv)
+    known = {name for name, _ in modules}
+    unknown = selected - known
+    if unknown:
+        sys.exit(f"unknown benchmark module(s) {sorted(unknown)}; "
+                 f"choose from {sorted(known)}")
+    print("name,us_per_call,derived")
     failures = []
     for name, mod in modules:
+        if selected and name not in selected:
+            continue
         try:
             mod.run(report)
         except Exception as e:  # keep the harness running

@@ -41,9 +41,12 @@ def _flatten_with_paths(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
         for k in sorted(tree.keys()):
             out += _flatten_with_paths(tree[k], f"{prefix}/{k}")
     elif isinstance(tree, VQWeight):
+        # meta layout: [K, N, d, n, *splits] — splits (grouped-projection
+        # family widths) appended so old 4-element checkpoints still load
         out += _flatten_with_paths(
             {"idx": tree.idx, "codebooks": tree.codebooks, "scale": tree.scale,
-             "__vqmeta__": np.asarray([tree.K, tree.N, tree.d, tree.n])},
+             "__vqmeta__": np.asarray(
+                 [tree.K, tree.N, tree.d, tree.n, *tree.splits])},
             f"{prefix}/__vq__",
         )
     elif isinstance(tree, AdamWState):
@@ -85,6 +88,7 @@ def _unflatten_from_paths(flat: Dict[str, Any]) -> Any:
                 codebooks=jnp.asarray(sub["codebooks"]),
                 scale=jnp.asarray(sub["scale"]),
                 K=int(meta[0]), N=int(meta[1]), d=int(meta[2]), n=int(meta[3]),
+                splits=tuple(int(s) for s in meta[4:]),
             )
         if "__adamw__" in node:
             sub = node["__adamw__"]

@@ -18,10 +18,11 @@ interpret mode on CPU; compiled for TPU on real hardware).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.vq import VQWeight
 
@@ -165,6 +166,18 @@ def eva_matmul(
     return y.reshape(*lead_shape, N).astype(out_dtype)
 
 
+def split_grouped_outputs(y: jax.Array, vq: VQWeight) -> Tuple[jax.Array, ...]:
+    """Slice the output of a grouped-family matmul (y = x @ [W1|..|Wg])
+    back into per-projection outputs at the recorded split points.
+
+    The wide matmul amortizes one VQ-GEMM / output-codebook computation
+    over every member; this split is free (pure slicing)."""
+    if not vq.splits:
+        return (y,)
+    offs = list(np.cumsum(vq.splits[:-1]))
+    return tuple(jnp.split(y, offs, axis=-1))
+
+
 def vq_matmul(
     x: jax.Array,
     vq: VQWeight,
@@ -207,3 +220,10 @@ def epilogue_adds(M: int, K: int, N: int, C: int, d: int) -> int:
 def compute_collapse_ratio(N: int, n: int) -> float:
     """Paper §III-B advantage 3: GEMV MACs / VQ-GEMM MACs = N / 2^n."""
     return N / float(2 ** n)
+
+
+def grouped_compute_collapse_ratio(splits: Tuple[int, ...], n: int) -> float:
+    """Effective collapse ratio of a grouped projection family: the single
+    shared VQ-GEMM serves sum(N_i) output channels -> sum(N_i) / 2^n
+    (vs N_i / 2^n for each member executed separately)."""
+    return compute_collapse_ratio(sum(splits), n)

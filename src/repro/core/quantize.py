@@ -7,6 +7,15 @@ Embeddings, lm_head, norms, routers, gates, convs and recurrence
 parameters stay high-precision — the same split as the paper (attention
 computation and non-FC parameters remain FP16).
 
+Same-input projection families are GROUPED by default: wq/wk/wv of an
+attention block become one "wqkv" leaf and gate/up of an MLP become one
+"gu" leaf, each a single wide VQWeight with recorded split points (see
+core/vq.py's grouped-codebook layout). The model layers then issue ONE
+EVA matmul per family and slice the output, amortizing the VQ-GEMM /
+output-codebook computation 3x (QKV) / 2x (gate+up). Cross-attention
+blocks (whisper "cross_attn", vision "xattn") are excluded — their q
+projection consumes a different input than k/v.
+
 Three methods:
   fit        — k-means additive VQ on real weights (small/smoke models)
   synthetic  — random valid indices/codebooks (benchmarks, huge dry-runs)
@@ -31,6 +40,17 @@ _BLOCK_SEGMENTS = (
 )
 _MIN_DIM = 64  # don't quantize tiny matrices (per-head gates etc.)
 
+# same-input projection families: (member keys, grouped key, required
+# sibling that disambiguates the layout consumer). "wo" distinguishes
+# attention_fwd's dict from e.g. xlstm's mlstm block (which also has
+# wq/wk/wv but consumes them itself); "down" anchors mlp_fwd/_expert_ffn.
+_GROUP_FAMILIES = (
+    (("wq", "wk", "wv"), "wqkv", "wo"),
+    (("gate", "up"), "gu", "down"),
+)
+# dict names whose members do NOT share an input (cross-attention)
+_NO_GROUP_KEYS = ("cross_attn", "xattn")
+
 
 def _eligible(path: Tuple[str, ...], w) -> bool:
     if not any(seg in path for seg in _BLOCK_SEGMENTS):
@@ -41,8 +61,10 @@ def _eligible(path: Tuple[str, ...], w) -> bool:
     return K >= _MIN_DIM and N >= _MIN_DIM
 
 
-def _quantize_leaf(w, cfg: ModelConfig, method: str, key) -> VQWeight:
-    """w: (..., K, N) possibly with stacked leading dims."""
+def _quantize_leaf(w, cfg: ModelConfig, method: str, key,
+                   splits: Tuple[int, ...] = ()) -> VQWeight:
+    """w: (..., K, N) possibly with stacked leading dims. `splits` marks w
+    as the column-concatenation of a grouped projection family."""
     lead = w.shape[:-2]
     K, N = w.shape[-2], w.shape[-1]
     d, n, C = cfg.vq_d, cfg.vq_n, cfg.vq_C
@@ -57,13 +79,11 @@ def _quantize_leaf(w, cfg: ModelConfig, method: str, key) -> VQWeight:
             idx=jax.ShapeDtypeStruct((*lead, C, V, N), idx_dtype),
             codebooks=jax.ShapeDtypeStruct((*lead, C, d, k), jnp.float32),
             scale=jax.ShapeDtypeStruct((*lead, N), jnp.float32),
-            K=K, N=N, d=d, n=n,
+            K=K, N=N, d=d, n=n, splits=splits,
         )
     if method == "synthetic":
         kk = jax.random.fold_in(key, hash(str(w.shape)) % (2 ** 31))
-        base = synthetic_vq(kk, K, N, d=d, n=n, C=C)
-        def bcast(a):
-            return jnp.broadcast_to(a, (*lead, *a.shape)) if lead else a
+        base = synthetic_vq(kk, K, N, d=d, n=n, C=C, splits=splits)
         # indices must differ per stacked layer — tile with per-layer perm-ish noise
         if lead:
             nlead = int(np.prod(lead))
@@ -76,7 +96,7 @@ def _quantize_leaf(w, cfg: ModelConfig, method: str, key) -> VQWeight:
             )(keys).reshape(*lead, C, d, k)
             return VQWeight(idx=idx, codebooks=cbs,
                             scale=jnp.ones((*lead, N), jnp.float32),
-                            K=K, N=N, d=d, n=n)
+                            K=K, N=N, d=d, n=n, splits=splits)
         return base
     if method == "fit":
         flat = w.reshape(-1, K, N)
@@ -93,7 +113,7 @@ def _quantize_leaf(w, cfg: ModelConfig, method: str, key) -> VQWeight:
             idx=reshape_leaf(vqs.idx),
             codebooks=reshape_leaf(vqs.codebooks),
             scale=reshape_leaf(vqs.scale),
-            K=K, N=N, d=d, n=n,
+            K=K, N=N, d=d, n=n, splits=splits,
         )
     raise ValueError(f"unknown method {method}")
 
@@ -113,16 +133,30 @@ def _to_serving_dtype(leaf):
     return leaf.astype(jnp.bfloat16)
 
 
+def _concat_cols(leaves):
+    """Column-concatenate member leaves; ShapeDtypeStructs are synthesized
+    (specs mode never allocates)."""
+    if isinstance(leaves[0], jax.ShapeDtypeStruct):
+        shp = leaves[0].shape
+        N = sum(l.shape[-1] for l in leaves)
+        return jax.ShapeDtypeStruct((*shp[:-1], N), leaves[0].dtype)
+    return jnp.concatenate(leaves, axis=-1)
+
+
 def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
                     key: Optional[jax.Array] = None,
                     serving_bf16: bool = True,
-                    quantize_lm_head: bool = False) -> Any:
+                    quantize_lm_head: bool = False,
+                    group_projections: bool = True) -> Any:
     """Walk the param tree and replace eligible {"w": ...} linears with
     {"vq": VQWeight} (preserving biases). Remaining large dense leaves
     (embeddings, lm_head) are cast to bf16 when `serving_bf16`.
     `quantize_lm_head` additionally VQ-compresses the output projection —
     beyond the paper (which keeps it FP16); worth ~0.3 GB/device of decode
-    traffic on qwen2-72b (EXPERIMENTS.md §Perf cell 1)."""
+    traffic on qwen2-72b (EXPERIMENTS.md §Perf cell 1).
+    `group_projections` fuses same-input families (wq/wk/wv -> "wqkv",
+    gate/up -> "gu") into single wide VQWeights with recorded splits —
+    the decode path then runs one EVA matmul per family."""
     key = key if key is not None else jax.random.PRNGKey(0)
     extra = ("lm_head",) if quantize_lm_head else ()
 
@@ -132,13 +166,56 @@ def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
                 and w.shape[-1] >= _MIN_DIM
         return _eligible(path, w)
 
+    def groupable(node, path, members, sibling):
+        if path and path[-1] in _NO_GROUP_KEYS:
+            return False
+        if sibling not in node or not all(m in node for m in members):
+            return False
+        leaves = []
+        for m in members:
+            sub = node[m]
+            if not (isinstance(sub, dict) and "w" in sub
+                    and not isinstance(sub["w"], VQWeight)
+                    and eligible(path + (m,), sub["w"])):
+                return False
+            leaves.append(sub["w"])
+        # one shared codebook set needs identical (lead..., K) shapes
+        if any(l.shape[:-1] != leaves[0].shape[:-1] for l in leaves):
+            return False
+        has_b = [("b" in node[m]) for m in members]
+        return all(has_b) or not any(has_b)
+
+    def group(node, path):
+        """Replace groupable families in a dict with single wide leaves."""
+        out = dict(node)
+        for members, gkey, sibling in _GROUP_FAMILIES:
+            if not groupable(out, path, members, sibling):
+                continue
+            splits = tuple(int(out[m]["w"].shape[-1]) for m in members)
+            wcat = _concat_cols([out[m]["w"] for m in members])
+            grouped = {"vq": _quantize_leaf(wcat, cfg, method, key,
+                                            splits=splits)}
+            if "b" in out[members[0]]:
+                grouped["b"] = _concat_cols([out[m]["b"] for m in members])
+            for m in members:
+                del out[m]
+            out[gkey] = grouped
+        return out
+
     def walk(node, path):
         if isinstance(node, dict):
+            if "vq" in node:
+                # already quantized (grouped this pass, or a prior pass):
+                # leave the node — incl. its bias dtype — untouched, same
+                # as the ungrouped replacement branch below
+                return node
             if "w" in node and not isinstance(node["w"], VQWeight) \
                     and eligible(path, node["w"]):
                 new = {kk: vv for kk, vv in node.items() if kk != "w"}
                 new["vq"] = _quantize_leaf(node["w"], cfg, method, key)
                 return new
+            if group_projections:
+                node = group(node, path)
             return {kk: walk(vv, path + (kk,)) for kk, vv in node.items()}
         if serving_bf16 and not isinstance(node, VQWeight):
             return _to_serving_dtype(node)

@@ -15,12 +15,25 @@ The quantized representation of W is
   W_hat[:, j] = scale[j] * concat_v( sum_c B[c, :, I[c, v, j]] )
 i.e. each d-element group of column j is the *sum* of one centroid from
 each codebook (additive VQ), times a per-column scale.
+
+Grouped-codebook layout
+-----------------------
+Same-input projection families (Wq|Wk|Wv of one attention block, or
+W_gate|W_up of one MLP) may be quantized as a SINGLE wide VQ weight of
+shape (K, sum_i N_i): one codebook set B serves every member, the index
+matrix is the column-concatenation of the members' indices, and
+``splits`` records the member widths (N_1, ..., N_g) so outputs can be
+sliced apart after one wide EVA matmul.  Because the VQ-GEMM stage
+(O = X·B) is independent of N, the grouped weight amortizes the output-
+codebook computation g-fold (3x for QKV, 2x for gate+up) and raises the
+effective compute-collapse ratio from N_i/2^n to (sum_i N_i)/2^n.
+``splits == ()`` means an ordinary ungrouped weight.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +43,11 @@ import numpy as np
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class VQWeight:
-    """Quantized representation of a (K, N) weight matrix."""
+    """Quantized representation of a (K, N) weight matrix.
+
+    For a grouped-projection family N = sum(splits); `splits` is static
+    metadata (part of the pytree aux data, preserved under jit/vmap/scan).
+    """
 
     idx: jax.Array        # (C, V, N) uint8 (n<=8) or int32 (n>8)
     codebooks: jax.Array  # (C, d, 2^n) fp32
@@ -40,15 +57,18 @@ class VQWeight:
     N: int = 0
     d: int = 8
     n: int = 8
+    splits: Tuple[int, ...] = ()   # per-member widths of a grouped family
 
     def tree_flatten(self):
-        return (self.idx, self.codebooks, self.scale), (self.K, self.N, self.d, self.n)
+        return (self.idx, self.codebooks, self.scale), (
+            self.K, self.N, self.d, self.n, self.splits)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         idx, codebooks, scale = children
-        K, N, d, n = aux
-        return cls(idx=idx, codebooks=codebooks, scale=scale, K=K, N=N, d=d, n=n)
+        K, N, d, n, splits = aux
+        return cls(idx=idx, codebooks=codebooks, scale=scale, K=K, N=N,
+                   d=d, n=n, splits=splits)
 
     @property
     def C(self) -> int:
@@ -141,7 +161,7 @@ def kmeans(key: jax.Array, points: jax.Array, k: int, iters: int = 20) -> Tuple[
 
 def fit_vq(
     key: jax.Array,
-    W: jax.Array,
+    W: Union[jax.Array, Sequence[jax.Array]],
     *,
     d: int = 8,
     n: int = 8,
@@ -155,7 +175,19 @@ def fit_vq(
     subtracting codebooks < c, followed by `refine_rounds` of alternating
     re-fits (each codebook refit against the residual of all others) —
     the paper's AQLM configuration at d=8, n=8, C=q.
+
+    Grouped mode: pass a sequence of same-K matrices ([Wq, Wk, Wv] or
+    [W_gate, W_up]) and they are fitted as ONE (K, sum N_i) matrix sharing
+    a single codebook set; the member widths are recorded in `splits`
+    (see the module docstring's grouped-codebook layout).
     """
+    splits: Tuple[int, ...] = ()
+    if isinstance(W, (list, tuple)):
+        Ks = {int(w.shape[0]) for w in W}
+        if len(Ks) != 1:
+            raise ValueError(f"grouped fit_vq requires equal K, got {Ks}")
+        splits = tuple(int(w.shape[1]) for w in W)
+        W = jnp.concatenate([jnp.asarray(w) for w in W], axis=1)
     K, N = W.shape
     assert K % d == 0, f"K={K} not divisible by d={d}"
     V = K // d
@@ -198,7 +230,8 @@ def fit_vq(
     B = jnp.stack([cb.T for cb in codebooks])  # (C, d, k): centroid e = B[c,:,e]
     idx_dtype = jnp.uint8 if n <= 8 else jnp.int32
     I = jnp.stack([a.reshape(V, N) for a in assigns]).astype(idx_dtype)  # (C, V, N)
-    return VQWeight(idx=I, codebooks=B, scale=scale, K=K, N=N, d=d, n=n)
+    return VQWeight(idx=I, codebooks=B, scale=scale, K=K, N=N, d=d, n=n,
+                    splits=splits)
 
 
 def dequantize(vq: VQWeight) -> jax.Array:
@@ -218,11 +251,14 @@ def dequantize(vq: VQWeight) -> jax.Array:
 
 def synthetic_vq(
     key: jax.Array, K: int, N: int, *, d: int = 8, n: int = 8, C: int = 2,
-    dtype=jnp.float32,
+    dtype=jnp.float32, splits: Tuple[int, ...] = (),
 ) -> VQWeight:
     """Random-but-valid VQ weight (for serving dry-runs / benchmarks where
     fitting k-means on a 72B model is pointless). Index distribution is
-    uniform, matching the paper's Fig. 14(b) entropy argument."""
+    uniform, matching the paper's Fig. 14(b) entropy argument. `splits`
+    marks the result as a grouped family (must sum to N)."""
+    if splits:
+        assert sum(splits) == N, (splits, N)
     V = K // d
     k = 2 ** n
     k_idx, k_cb, k_sc = jax.random.split(key, 3)
@@ -231,10 +267,12 @@ def synthetic_vq(
     # scale codebooks ~ 1/sqrt(K*C) so W_hat has unit-ish variance
     codebooks = (jax.random.normal(k_cb, (C, d, k), dtype) / np.sqrt(K * C)).astype(dtype)
     scale = jnp.ones((N,), jnp.float32)
-    return VQWeight(idx=idx, codebooks=codebooks, scale=scale, K=K, N=N, d=d, n=n)
+    return VQWeight(idx=idx, codebooks=codebooks, scale=scale, K=K, N=N,
+                    d=d, n=n, splits=splits)
 
 
-def vq_specs(K: int, N: int, *, d: int = 8, n: int = 8, C: int = 2) -> VQWeight:
+def vq_specs(K: int, N: int, *, d: int = 8, n: int = 8, C: int = 2,
+             splits: Tuple[int, ...] = ()) -> VQWeight:
     """ShapeDtypeStruct stand-in with identical tree structure (dry-run)."""
     V = K // d
     k = 2 ** n
@@ -243,7 +281,22 @@ def vq_specs(K: int, N: int, *, d: int = 8, n: int = 8, C: int = 2) -> VQWeight:
         idx=jax.ShapeDtypeStruct((C, V, N), idx_dtype),
         codebooks=jax.ShapeDtypeStruct((C, d, k), jnp.float32),
         scale=jax.ShapeDtypeStruct((N,), jnp.float32),
-        K=K, N=N, d=d, n=n,
+        K=K, N=N, d=d, n=n, splits=splits,
+    )
+
+
+def split_grouped(vq: VQWeight) -> Tuple[VQWeight, ...]:
+    """Slice a grouped VQWeight back into its per-projection members
+    (shared codebooks; per-member index columns and scales)."""
+    if not vq.splits:
+        return (vq,)
+    offs = np.cumsum((0,) + vq.splits)
+    return tuple(
+        VQWeight(
+            idx=vq.idx[..., lo:hi], codebooks=vq.codebooks,
+            scale=vq.scale[..., lo:hi], K=vq.K, N=hi - lo, d=vq.d, n=vq.n,
+        )
+        for lo, hi in zip(offs[:-1], offs[1:])
     )
 
 

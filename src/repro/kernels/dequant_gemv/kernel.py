@@ -28,7 +28,7 @@ def _dequant_gemv_kernel(x_ref, cb_ref, i_ref, s_ref, y_ref, *, n_v_tiles: int):
     M, bv, d = x_ref.shape
     bn = i_ref.shape[2]
 
-    idx = i_ref[...].astype(jnp.int32)          # (C, bv, bn)
+    idx = i_ref[...].astype(jnp.int32)          # (C, bv, bn) per-tile upcast
     # centroid gather: w[v, j, :] = sum_c cb[c, idx[c,v,j], :]
     w = jnp.zeros((bv, bn, d), jnp.float32)
     for c in range(C):
@@ -47,7 +47,7 @@ def _dequant_gemv_kernel(x_ref, cb_ref, i_ref, s_ref, y_ref, *, n_v_tiles: int):
 def dequant_gemv_pallas(
     x: jax.Array,          # (M, V, d)
     codebooks: jax.Array,  # (C, k, d)  NOTE: centroid-major layout
-    I: jax.Array,          # (C, V, N) int32
+    I: jax.Array,          # (C, V, N) uint8 (n<=8) or int32 (n>8)
     scale: jax.Array,      # (N,)
     *,
     block_v: int = 32,

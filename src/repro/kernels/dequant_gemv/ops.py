@@ -30,7 +30,8 @@ def dequant_gemv(
     M = x.size // K
     X = x.reshape(M, V, d).astype(jnp.float32)
     cb = vq.codebooks.transpose(0, 2, 1).astype(jnp.float32)  # (C, k, d)
-    I = vq.idx.astype(jnp.int32)
+    # stream indices at storage width (uint8 for n<=8); in-kernel upcast
+    I = vq.idx
     scale = vq.scale.astype(jnp.float32)
 
     if not use_pallas:

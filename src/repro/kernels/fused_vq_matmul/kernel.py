@@ -15,15 +15,26 @@ This is the TPU realization of the paper's architecture (Fig. 3(c)/Fig. 4):
     Epilogue Unit),
   * O never round-trips to HBM — the GEMM->EU handoff of Fig. 7(b).
 
+uint8 index-streaming contract: I tiles arrive in their STORAGE dtype —
+uint8 for n <= 8 (int32 only when n > 8) — and are upcast to int32
+per-tile inside the kernel, after the HBM->VMEM copy. Callers must NOT
+pre-widen the index matrix: a pre-call `astype(int32)` would stream 4x
+the bytes the paper's q-bits/weight bandwidth model assumes (32 vs n
+bits per index) and quadruple the VMEM index-tile footprint.
+
 Grid: (num_n_tiles, num_v_tiles), V innermost. During the n==0 sweep each
 v-step additionally computes its OC slab into scratch; later n-tiles reuse
-it. HBM traffic per layer is therefore: x once, I once (q bits/weight),
-y once — the paper's bandwidth claim (d-fold reduction vs centroid
-streaming, 8/16-fold vs bf16 weights at q=2).
+it. For a grouped projection family ([Wq|Wk|Wv] or [W_gate|W_up] sharing
+one codebook set, core/vq.py) the N sweep is simply wider: the same
+VMEM-resident OC scratch serves every member's n-tiles, amortizing the
+VQ-GEMM stage g-fold instead of recomputing it per projection. HBM
+traffic per layer is therefore: x once, I once (q bits/weight), y once —
+the paper's bandwidth claim (d-fold reduction vs centroid streaming,
+8/16-fold vs bf16 weights at q=2).
 
-VMEM budget: scratch is C·M·V·256 fp32; callers tile M (decode batches are
-sharded small) and V so this stays within ~16 MB (e.g. C=2, M=8, V=512
--> 8 MB).
+VMEM budget: scratch is C·M·V·2^n fp32 = C*M*V*2^n*4 bytes; the wrapper
+tiles M so this stays under its ~8 MB cap (e.g. C=2, M=8, V=512, n=8
+-> exactly 8 MB) and callers pick block_v to bound the gathered tile.
 """
 from __future__ import annotations
 
@@ -65,6 +76,7 @@ def _fused_kernel(
         y_ref[...] = jnp.zeros_like(y_ref)
 
     o = o_scr[:, :, pl.dslice(v * block_v, block_v), :]  # (C, M, bv, k)
+    # per-tile upcast of the streamed uint8 (or int32 for n>8) index tile
     idx = i_ref[...].astype(jnp.int32)                   # (C, bv, bn)
     g = jnp.take_along_axis(o, idx[:, None, :, :], axis=3)  # (C, M, bv, bn)
     y_ref[...] += g.sum(axis=(0, 2))
@@ -77,7 +89,7 @@ def _fused_kernel(
 def fused_vq_matmul_pallas(
     x: jax.Array,          # (M, V, d)
     codebooks: jax.Array,  # (C, d, k)
-    I: jax.Array,          # (C, V, N) int32
+    I: jax.Array,          # (C, V, N) uint8 (n<=8) or int32 (n>8)
     scale: jax.Array,      # (N,) fp32
     *,
     block_v: int = 32,

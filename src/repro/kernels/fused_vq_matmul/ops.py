@@ -2,6 +2,13 @@
 
 Accepts a VQWeight and activations of any leading shape; handles padding,
 M-tiling (to bound the VMEM OC scratch), and dtype conversion.
+
+The index matrix is handed to the kernel in its storage dtype (uint8 for
+n <= 8) — the kernel upcasts per streamed tile, so HBM index traffic
+stays at q bits/weight (see kernel.py's uint8 streaming contract). A
+grouped projection family (VQWeight.splits non-empty) is just a wider N
+here: one call, one OC scratch fill, every member's output columns swept
+against the same VMEM-resident OC.
 """
 from __future__ import annotations
 
@@ -14,11 +21,13 @@ from repro.core.vq import VQWeight
 from repro.kernels.fused_vq_matmul.kernel import fused_vq_matmul_pallas
 from repro.kernels.fused_vq_matmul.ref import fused_vq_matmul_ref
 
-# Cap the OC scratch at ~8 MB fp32 (C*M_tile*V*256*4 bytes).
+# Cap the OC scratch per pallas_call at 8 MiB: the scratch holds
+# C * m_tile * V_padded * 2^n fp32, i.e. C*m_tile*V_padded*2^n*4 bytes.
 _MAX_OC_BYTES = 8 * 1024 * 1024
 
 
 def _m_tile(C: int, V: int, k: int) -> int:
+    """Largest m_tile with C * m_tile * V * k * 4 bytes <= the scratch cap."""
     per_m = C * V * k * 4
     return max(1, _MAX_OC_BYTES // max(per_m, 1))
 
@@ -42,7 +51,9 @@ def fused_vq_matmul(
     k = vq.codebooks.shape[-1]
     M = x.size // K
     X = x.reshape(M, V, d).astype(jnp.float32)
-    I = vq.idx.astype(jnp.int32)
+    # stream indices in their storage dtype (uint8 for n<=8) — the kernel
+    # upcasts per tile; pre-widening here would 4x the index HBM traffic
+    I = vq.idx
     scale = vq.scale.astype(jnp.float32)
 
     if not use_pallas:
@@ -54,24 +65,24 @@ def fused_vq_matmul(
     pad_v = (-V) % bv
     pad_n = (-N) % bn
     if pad_v:
+        # padded V rows gather index 0 from zeroed X rows -> contribute 0
         X = jnp.pad(X, ((0, 0), (0, pad_v), (0, 0)))
         I = jnp.pad(I, ((0, 0), (0, pad_v), (0, 0)))
     if pad_n:
         I = jnp.pad(I, ((0, 0), (0, 0), (0, pad_n)))
         scale = jnp.pad(scale, (0, pad_n))
 
+    # M-tiling bounds the OC scratch at C*mt*V_padded*k*4 bytes per call;
+    # this Python loop is unrolled under jit (one pallas_call per M-tile).
     mt = _m_tile(C, X.shape[1], k)
-    outs = []
-    for m0 in range(0, M, mt):
-        m1 = min(m0 + mt, M)
-        xm = X[m0:m1]
-        pad_m = 0
-        outs.append(
-            fused_vq_matmul_pallas(
-                xm, vq.codebooks.astype(jnp.float32), I, scale,
-                block_v=bv, block_n=bn, interpret=interpret,
-            )
+    cb = vq.codebooks.astype(jnp.float32)
+    outs = [
+        fused_vq_matmul_pallas(
+            X[m0:m0 + mt], cb, I, scale,
+            block_v=bv, block_n=bn, interpret=interpret,
         )
+        for m0 in range(0, M, mt)
+    ]
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
     if pad_n:
         y = y[:, :N]

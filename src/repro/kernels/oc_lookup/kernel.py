@@ -13,6 +13,13 @@ the paper's EU).
 Grid: (num_n_tiles, num_v_tiles) with V innermost so the (M, bn) output
 block stays resident in VMEM across the V accumulation (output-stationary,
 matching Fig. 4's stationary output tile).
+
+uint8 index-streaming contract: index tiles arrive in their storage
+dtype (uint8 for n <= 8, int32 only for n > 8) and are upcast to int32
+per tile INSIDE the kernel, so HBM->VMEM index traffic stays at the
+paper's q bits/weight. Callers must not pre-widen I. For a grouped
+projection family (shared codebook set, core/vq.py) N is the family's
+summed width — the same OC tile serves every member's columns.
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ def _oc_lookup_kernel(o_ref, i_ref, s_ref, y_ref, *, n_v_tiles: int):
         y_ref[...] = jnp.zeros_like(y_ref)
 
     o = o_ref[...]                          # (C, M, bv, k) fp32
-    idx = i_ref[...].astype(jnp.int32)      # (C, bv, bn)
+    idx = i_ref[...].astype(jnp.int32)      # (C, bv, bn) per-tile upcast
     g = jnp.take_along_axis(o, idx[:, None, :, :], axis=3)  # (C, M, bv, bn)
     y_ref[...] += g.sum(axis=(0, 2))        # add-only reduction
 
@@ -42,7 +49,7 @@ def _oc_lookup_kernel(o_ref, i_ref, s_ref, y_ref, *, n_v_tiles: int):
 
 def oc_lookup_pallas(
     O: jax.Array,        # (C, M, V, k) fp32
-    I: jax.Array,        # (C, V, N) int32
+    I: jax.Array,        # (C, V, N) uint8 (n<=8) or int32 (n>8)
     scale: jax.Array,    # (N,) fp32
     *,
     block_v: int = 32,

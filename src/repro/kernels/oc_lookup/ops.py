@@ -25,7 +25,8 @@ def oc_lookup(
 ) -> jax.Array:
     C, M, V, k = O.shape
     N = I.shape[-1]
-    I = I.astype(jnp.int32)
+    # indices stream in their storage dtype (uint8 for n<=8); the kernel
+    # upcasts per tile — see the uint8 streaming contract in kernel.py
     scale = scale.astype(jnp.float32)
     if not use_pallas:
         return oc_lookup_ref(O, I, scale)

@@ -179,6 +179,19 @@ def linear(p: Params, x: jax.Array, rc: RunConfig, *, out_dtype=None) -> jax.Arr
     return y
 
 
+def grouped_linear(p: Params, x: jax.Array, rc: RunConfig,
+                   *, out_dtype=None) -> Tuple[jax.Array, ...]:
+    """Apply a grouped-projection linear (one wide VQWeight holding a
+    same-input family, e.g. [Wq|Wk|Wv]) and slice the output at the
+    recorded split points.
+
+    One EVA matmul serves the whole family: the VQ-GEMM / output-codebook
+    computation is amortized over every member and the fused Pallas kernel
+    sweeps one widened N with a single VMEM-resident OC scratch."""
+    y = linear(p, x, rc, out_dtype=out_dtype)
+    return core_ops.split_grouped_outputs(y, p["vq"])
+
+
 # ---------------------------------------------------------------------------
 # Norms & rotary
 # ---------------------------------------------------------------------------
@@ -411,11 +424,22 @@ def attention_fwd(
     B, S, D = x.shape
     H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
-    q = linear(p["wq"], x, rc).reshape(B, S, H, hd)
     kv_in = kv_source if kv_source is not None else x
     Skv_in = kv_in.shape[1]
-    k = linear(p["wk"], kv_in, rc).reshape(B, Skv_in, Hk, hd)
-    v = linear(p["wv"], kv_in, rc).reshape(B, Skv_in, Hk, hd)
+    if "wqkv" in p:
+        # grouped QKV (self-attention only — the quantization pass never
+        # groups cross-attention): ONE wide EVA matmul, outputs sliced at
+        # the recorded (q_dim, kv_dim, kv_dim) split points.
+        if kv_source is not None:
+            raise ValueError("grouped wqkv is invalid for cross-attention")
+        q, k, v = grouped_linear(p["wqkv"], x, rc)
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, Skv_in, Hk, hd)
+        v = v.reshape(B, Skv_in, Hk, hd)
+    else:
+        q = linear(p["wq"], x, rc).reshape(B, S, H, hd)
+        k = linear(p["wk"], kv_in, rc).reshape(B, Skv_in, Hk, hd)
+        v = linear(p["wv"], kv_in, rc).reshape(B, Skv_in, Hk, hd)
 
     if cfg.qk_norm:
         q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
@@ -621,6 +645,9 @@ def make_mlp(key, d_model: int, d_ff: int) -> Params:
 
 
 def mlp_fwd(p: Params, x: jax.Array, rc: RunConfig) -> jax.Array:
+    if "gu" in p:  # grouped gate+up: one wide EVA matmul, sliced
+        g, u = grouped_linear(p["gu"], x, rc)
+        return linear(p["down"], jax.nn.silu(g) * u, rc)
     return linear(p["down"], jax.nn.silu(linear(p["gate"], x, rc)) * linear(p["up"], x, rc), rc)
 
 
@@ -655,6 +682,13 @@ def make_moe(key, cfg: ModelConfig) -> Params:
 
 def _expert_ffn(ep: Params, x: jax.Array, rc: RunConfig) -> jax.Array:
     """x: (E, cap, D) with per-expert stacked params (leading E)."""
+    if "gu" in ep:  # grouped gate+up per expert (splits survive the vmap)
+        def one_g(e_gu, e_down, xe):
+            g, u = grouped_linear(e_gu, xe, rc)
+            return linear(e_down, jax.nn.silu(g) * u, rc)
+
+        return jax.vmap(one_g)(ep["gu"], ep["down"], x)
+
     def one(e_gate, e_up, e_down, xe):
         h = jax.nn.silu(linear(e_gate, xe, rc)) * linear(e_up, xe, rc)
         return linear(e_down, h, rc)

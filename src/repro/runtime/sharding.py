@@ -13,6 +13,9 @@ chooses intermediate shardings; non-divisible dims are padded by SPMD
 Layout reminders:
   dense weight leaves under layers:         (L, ..., K, N)
   VQ idx (L, ..., C, V, N); codebooks (L, ..., C, d, 2^n); scale (L, ..., N)
+  grouped families ("wqkv", "gu"): one wide VQWeight, N = sum(splits);
+  column-parallel like their members (splits must ride along in pspec
+  VQWeights — treedefs compare aux data)
   caches: attention k/v (L, B, S, Hk, hd); MLA latent (L, B, S, r);
           recurrent states (G, B, ...).
 """
@@ -91,6 +94,22 @@ def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
         nd_cb = vq.codebooks.ndim
         nd_sc = vq.scale.ndim
         V, N = vq.idx.shape[-2], vq.idx.shape[-1]
+
+        # grouped family: column-shard only when every member boundary
+        # falls on a shard boundary — otherwise split_grouped_outputs'
+        # slices straddle devices and each decode layer pays a reshard.
+        # Misaligned families prefer V (contraction) sharding instead.
+        def n_split_aligned():
+            if not vq.splits or not div(N):
+                return div(N)
+            shard = N // mdim
+            off = 0
+            for width in vq.splits[:-1]:
+                off += width
+                if off % shard != 0:
+                    return False
+            return True
+
         if shard_expert:
             lead = nd_idx - 3
             out["vq"] = VQWeight(
@@ -100,7 +119,7 @@ def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
                 if lead >= 1 else P(*([None] * nd_cb)),
                 scale=_pad_front((ma,) + (None,) * (nd_sc - lead), nd_sc)
                 if lead >= 1 else P(*([None] * nd_sc)),
-                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
         elif row and div(V):
             # shard V (the K/d axis); lookup partial-sums psum over 'model'
@@ -108,29 +127,29 @@ def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
                 idx=_pad_front((ma, None), nd_idx),
                 codebooks=P(*([None] * nd_cb)),
                 scale=P(*([None] * nd_sc)),
-                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
-        elif div(N):
+        elif n_split_aligned():
             # shard N: indices and scales column-sharded, OC replicated
             out["vq"] = VQWeight(
                 idx=_pad_front((ma,), nd_idx),
                 codebooks=P(*([None] * nd_cb)),
                 scale=_pad_front((ma,), nd_sc),
-                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
         elif div(V):
             out["vq"] = VQWeight(
                 idx=_pad_front((ma, None), nd_idx),
                 codebooks=P(*([None] * nd_cb)),
                 scale=P(*([None] * nd_sc)),
-                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
         else:
             out["vq"] = VQWeight(
                 idx=P(*([None] * nd_idx)),
                 codebooks=P(*([None] * nd_cb)),
                 scale=P(*([None] * nd_sc)),
-                K=vq.K, N=vq.N, d=vq.d, n=vq.n,
+                K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
     if "b" in node:
         b = node["b"]

@@ -23,16 +23,27 @@ from repro.models import build_model
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
+def _abstract_mesh():
+    """Production-shaped AbstractMesh across jax API revisions (0.4.37
+    takes ((name, size), ...) pairs; older releases took sizes + names)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
+    except TypeError:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
 class TestShardingRules:
     """Specs must be structurally valid and exactly divisible on the
     production mesh for every arch (checked abstractly, no devices)."""
 
     @pytest.mark.parametrize("arch", ARCH_IDS)
     def test_param_specs_divisible(self, arch):
-        from jax.sharding import AbstractMesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.runtime.sharding import opt_pspecs, param_pspecs
 
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = _abstract_mesh()
         model = build_model(get_config(arch))
         for quantized in (False, True):
             specs = model.param_specs(quantized=quantized)
@@ -58,10 +69,10 @@ class TestShardingRules:
 
     @pytest.mark.parametrize("arch", ARCH_IDS)
     def test_cache_specs_divisible(self, arch):
-        from jax.sharding import AbstractMesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.runtime.sharding import cache_pspecs
 
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = _abstract_mesh()
         model = build_model(get_config(arch))
         cspecs = model.cache_specs(128, 32768)
         pspecs = cache_pspecs(cspecs, mesh)

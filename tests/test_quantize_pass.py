@@ -30,9 +30,16 @@ class TestEligibility:
         # embedding and lm_head stay dense
         assert "emb" in q["embedding"]
         assert "w" in q["lm_head"]
-        # attention + mlp projections quantized
-        assert isinstance(q["layers"]["attn"]["wq"]["vq"], VQWeight)
+        # same-input projection families grouped into single wide leaves
+        wqkv = q["layers"]["attn"]["wqkv"]["vq"]
+        assert isinstance(wqkv, VQWeight)
+        assert wqkv.splits == (cfg.q_dim, cfg.kv_dim, cfg.kv_dim)
+        assert wqkv.N == cfg.q_dim + 2 * cfg.kv_dim
+        gu = q["layers"]["mlp"]["gu"]["vq"]
+        assert isinstance(gu, VQWeight)
+        assert gu.splits == (cfg.d_ff, cfg.d_ff)
         assert isinstance(q["layers"]["mlp"]["down"]["vq"], VQWeight)
+        assert q["layers"]["mlp"]["down"]["vq"].splits == ()
         # norms untouched
         assert "g" in q["final_norm"]
 
@@ -40,10 +47,12 @@ class TestEligibility:
         cfg, model, params = _params("mixtral_8x22b")
         q = quantize_params(params, cfg, method="synthetic", key=KEY)
         moe = q["layers"]["moe"]
-        assert isinstance(moe["experts"]["gate"]["vq"], VQWeight)
+        # expert gate+up grouped into one wide leaf per expert
+        assert isinstance(moe["experts"]["gu"]["vq"], VQWeight)
+        assert len(moe["experts"]["gu"]["vq"].splits) == 2
         assert "wr" in moe["router"]  # router stays dense
         # stacked leading dims preserved: (L, E, C, V, N)
-        assert moe["experts"]["gate"]["vq"].idx.ndim == 5
+        assert moe["experts"]["gu"]["vq"].idx.ndim == 5
 
     def test_gates_and_recurrence_not_quantized(self):
         cfg, model, params = _params("xlstm_125m")
@@ -88,11 +97,15 @@ class TestStructure:
         cfg, model, params = _params()
         cfg2 = dataclasses.replace(cfg, vq_n=6)
         qf = quantize_params(params, cfg2, method="fit", key=KEY)
-        vq = qf["layers"]["mlp"]["gate"]["vq"]
-        W = params["layers"]["mlp"]["gate"]["w"]  # (L, K, N)
+        vq = qf["layers"]["mlp"]["gu"]["vq"]      # grouped [W_gate|W_up]
+        W = np.concatenate(
+            [np.asarray(params["layers"]["mlp"]["gate"]["w"]),
+             np.asarray(params["layers"]["mlp"]["up"]["w"])], axis=-1,
+        )  # (L, K, 2*d_ff)
+        assert vq.splits == (cfg.d_ff, cfg.d_ff)
         errs = []
         for l in range(W.shape[0]):
-            wl = np.asarray(W[l])
+            wl = W[l]
             vql = VQWeight(idx=vq.idx[l], codebooks=vq.codebooks[l],
                            scale=vq.scale[l], K=vq.K, N=vq.N, d=vq.d, n=vq.n)
             w_hat = np.asarray(dequantize(vql))
