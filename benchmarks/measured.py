@@ -45,15 +45,24 @@ def run(report):
                f"dense_us={t_dense*1e6:.0f};dequant_us={t_deq*1e6:.0f};"
                f"speedup_vs_dequant={t_deq/t_eva:.2f}")
 
-    # batched decode (continuous batching regime)
+    # batched decode (continuous batching regime): the AUTO epilogue must
+    # stay >= 1x vs dequant across the M sweep. At M>=8 the direct
+    # gather's (C, M, V, N) intermediate falls out of cache and used to
+    # regress below the dequant baseline; select_epilogue switches to the
+    # v-blocked scan there (direct_us is reported for crossover evidence).
     K, N = 4096, 4096
     vq = synthetic_vq(key, K, N, d=8, n=8, C=2)
     for M in (1, 8, 32):
         x = jax.random.normal(key, (M, K), jnp.float32)
-        t_eva = _time(jax.jit(core_ops.eva_matmul), x, vq)
+        t_eva = _time(jax.jit(core_ops.eva_matmul), x, vq)      # auto
+        t_dir = _time(jax.jit(
+            lambda a, b: core_ops.eva_matmul(a, b, epilogue="direct")), x, vq)
         t_deq = _time(jax.jit(core_ops.dequant_matmul), x, vq)
+        kind, bv = core_ops.select_epilogue(M, vq.V, N, vq.C, 2 ** vq.n, vq.d)
         report(f"measured/batch{M}_{K}x{N}", t_eva * 1e6,
-               f"dequant_us={t_deq*1e6:.0f};speedup={t_deq/t_eva:.2f}")
+               f"dequant_us={t_deq*1e6:.0f};speedup={t_deq/t_eva:.2f};"
+               f"direct_us={t_dir*1e6:.0f};"
+               f"epilogue={kind if bv is None else f'{kind}_v{bv}'}")
 
     # grouped QKV decode: ONE wide VQ-GEMM + OC lookup over [Wq|Wk|Wv]
     # (shared codebook set, core/vq.py grouped layout) vs three separate
@@ -67,23 +76,28 @@ def run(report):
     # both an unsharded GQA layer and a TP8-sharded one (each rank holds
     # N_i/8 columns). Grouped/separate windows are INTERLEAVED and each
     # side reports its min-of-reps (least-interfered window) — shared-
-    # runner load drift otherwise swamps the effect. Epilogue per regime:
-    # direct gather at M=1, v-blocked scan at M=8 (the M*V*N intermediate
-    # falls out of cache).
-    for K, Nq, Nkv, tag in ((4096, 4096, 1024, "llama3_8b"),
-                            (8192, 1024, 128, "qwen2_72b_tp8")):
-        g = synthetic_vq(key, K, Nq + 2 * Nkv, d=8, n=8, C=2,
-                         splits=(Nq, Nkv, Nkv))
-        vq_q, vq_k, vq_v = split_grouped(g)  # same weights, executed apart
-        for M, bv in ((1, None), (8, 32)):
+    # runner load drift otherwise swamps the effect. The epilogue is the
+    # AUTO selection on both sides (per-regime: direct at M=1, recon at
+    # M>=8) — grouped families inherit it through the same eva_matmul
+    # default. Families: attention QKV (unsharded GQA + TP8 shard),
+    # xlstm mLSTM qkv (square di x di members) and MLA q+kv_a.
+    for K, splits, tag in (
+            ((4096), (4096, 1024, 1024), "qkv_llama3_8b"),
+            ((8192), (1024, 128, 128), "qkv_qwen2_72b_tp8"),
+            ((1536), (1536, 1536, 1536), "xlstm_mlstm_qkv"),   # di = 2*768
+            ((2048), (3072, 576), "mla_q_kva_dsv2lite"),       # H*(dn+dr), r+dr
+    ):
+        g = synthetic_vq(key, K, sum(splits), d=8, n=8, C=2, splits=splits)
+        members = split_grouped(g)  # same weights, executed apart
+        for M in (1, 8):
             x = jax.random.normal(key, (M, K), jnp.float32)
             f_grp = jax.jit(lambda xx, vq: core_ops.split_grouped_outputs(
-                core_ops.eva_matmul(xx, vq, block_v=bv), vq))
-            f_sep = jax.jit(lambda xx, a, b, c: tuple(
-                core_ops.eva_matmul(xx, m, block_v=bv) for m in (a, b, c)))
+                core_ops.eva_matmul(xx, vq), vq))
+            f_sep = jax.jit(lambda xx, *ms: tuple(
+                core_ops.eva_matmul(xx, m) for m in ms))
             for _ in range(2):  # compile + warm
                 jax.block_until_ready(f_grp(x, g))
-                jax.block_until_ready(f_sep(x, vq_q, vq_k, vq_v))
+                jax.block_until_ready(f_sep(x, *members))
             # size each timing window to ~200ms so scheduler interference
             # can't flip a single rep; min-of-reps = least-interfered run
             est = _time(f_grp, x, g, iters=1, warmup=0)
@@ -91,14 +105,15 @@ def run(report):
             t_g, t_s = [], []
             for _ in range(7):
                 t_g.append(_time(f_grp, x, g, iters=iters, warmup=0))
-                t_s.append(_time(f_sep, x, vq_q, vq_k, vq_v, iters=iters,
-                                 warmup=0))
+                t_s.append(_time(f_sep, x, *members, iters=iters, warmup=0))
             collapse = core_ops.grouped_compute_collapse_ratio(g.splits, g.n)
-            report(f"measured/grouped_qkv_{tag}_m{M}", min(t_g) * 1e6,
+            kind, bv = core_ops.select_epilogue(M, g.V, g.N, g.C, 2 ** g.n,
+                                                g.d)
+            report(f"measured/grouped_{tag}_m{M}", min(t_g) * 1e6,
                    f"separate_us={min(t_s)*1e6:.0f};"
                    f"speedup_vs_separate={min(t_s)/min(t_g):.2f};"
                    f"grouped_collapse_ratio={collapse:.0f};"
-                   f"epilogue={'direct' if bv is None else f'block_v={bv}'}")
+                   f"epilogue={kind if bv is None else f'{kind}_v{bv}'}")
 
     # pallas kernels, interpret mode (validation-path timing)
     from repro.kernels.fused_vq_matmul import fused_vq_matmul

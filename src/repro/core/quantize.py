@@ -8,13 +8,15 @@ parameters stay high-precision — the same split as the paper (attention
 computation and non-FC parameters remain FP16).
 
 Same-input projection families are GROUPED by default: wq/wk/wv of an
-attention block become one "wqkv" leaf and gate/up of an MLP become one
-"gu" leaf, each a single wide VQWeight with recorded split points (see
-core/vq.py's grouped-codebook layout). The model layers then issue ONE
-EVA matmul per family and slice the output, amortizing the VQ-GEMM /
-output-codebook computation 3x (QKV) / 2x (gate+up). Cross-attention
-blocks (whisper "cross_attn", vision "xattn") are excluded — their q
-projection consumes a different input than k/v.
+attention block (GQA attention AND xlstm's mLSTM block, whose q/k/v all
+consume the up-projected h) become one "wqkv" leaf, MLA's wq/wkv_a pair
+(both consume the block input x) becomes "wq_kva", and gate/up of an MLP
+become "gu" — each a single wide VQWeight with recorded split points
+(see core/vq.py's grouped-codebook layout). The model layers then issue
+ONE EVA matmul per family and slice the output, amortizing the VQ-GEMM /
+output-codebook computation g-fold. Cross-attention blocks (whisper
+"cross_attn", vision "xattn") are excluded — their q projection consumes
+a different input than k/v.
 
 Three methods:
   fit        — k-means additive VQ on real weights (small/smoke models)
@@ -42,10 +44,14 @@ _MIN_DIM = 64  # don't quantize tiny matrices (per-head gates etc.)
 
 # same-input projection families: (member keys, grouped key, required
 # sibling that disambiguates the layout consumer). "wo" distinguishes
-# attention_fwd's dict from e.g. xlstm's mlstm block (which also has
-# wq/wk/wv but consumes them itself); "down" anchors mlp_fwd/_expert_ffn.
+# attention_fwd's dict from xlstm's mlstm block (which also has wq/wk/wv
+# but consumes them itself — its family is anchored by "w_if" instead);
+# "down" anchors mlp_fwd/_expert_ffn; "wkv_b" is unique to the MLA dict,
+# whose wq and wkv_a both consume the block input x.
 _GROUP_FAMILIES = (
-    (("wq", "wk", "wv"), "wqkv", "wo"),
+    (("wq", "wk", "wv"), "wqkv", "wo"),       # attention_fwd qkv
+    (("wq", "wk", "wv"), "wqkv", "w_if"),     # xlstm mlstm qkv (input: h)
+    (("wq", "wkv_a"), "wq_kva", "wkv_b"),     # MLA q + kv_a (input: x)
     (("gate", "up"), "gu", "down"),
 )
 # dict names whose members do NOT share an input (cross-attention)
@@ -154,9 +160,10 @@ def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
     `quantize_lm_head` additionally VQ-compresses the output projection —
     beyond the paper (which keeps it FP16); worth ~0.3 GB/device of decode
     traffic on qwen2-72b (EXPERIMENTS.md §Perf cell 1).
-    `group_projections` fuses same-input families (wq/wk/wv -> "wqkv",
-    gate/up -> "gu") into single wide VQWeights with recorded splits —
-    the decode path then runs one EVA matmul per family."""
+    `group_projections` fuses same-input families (attention and mLSTM
+    wq/wk/wv -> "wqkv", MLA wq/wkv_a -> "wq_kva", gate/up -> "gu") into
+    single wide VQWeights with recorded splits — the decode path then
+    runs one EVA matmul per family."""
     key = key if key is not None else jax.random.PRNGKey(0)
     extra = ("lm_head",) if quantize_lm_head else ()
 

@@ -6,9 +6,24 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import ops as core_ops
 from repro.core.vq import VQWeight
 from repro.kernels.dequant_gemv.kernel import dequant_gemv_pallas
 from repro.kernels.dequant_gemv.ref import dequant_gemv_ref
+
+
+def _auto_tiles(M: int, V: int, N: int, d: int):
+    """This kernel's VMEM footprint per grid step is the reconstructed
+    weight slab (bv, bn, d) fp32 plus the (M, bv, d) x tile — no OC
+    scratch — so it gets its own model rather than the fused kernel's:
+    start at the paper's v=32 / 512-lane tiles and shrink bn, then bv,
+    until 4*d*(bv*bn + M*bv) fits the tile budget."""
+    bv, bn = min(32, V), min(512, N)
+    while bn > 128 and 4 * d * (bv * bn + M * bv) > core_ops.FUSED_GATHER_TILE_BYTES:
+        bn //= 2
+    while bv > 8 and 4 * d * (bv * bn + M * bv) > core_ops.FUSED_GATHER_TILE_BYTES:
+        bv //= 2
+    return bv, min(bn, N)
 
 
 @functools.partial(
@@ -18,12 +33,14 @@ def dequant_gemv(
     x: jax.Array,
     vq: VQWeight,
     *,
-    block_v: int = 32,
-    block_n: int = 512,
+    block_v="auto",
+    block_n="auto",
     interpret: bool = False,
     use_pallas: bool = True,
     out_dtype=None,
 ) -> jax.Array:
+    """block_v/block_n accept "auto" or explicit ints; non-divisible V/N
+    are padded (zeroed X rows gather index 0 -> contribute 0)."""
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     K, N, V, d, C = vq.K, vq.N, vq.V, vq.d, vq.C
@@ -38,8 +55,9 @@ def dequant_gemv(
         y = dequant_gemv_ref(X, cb, I, scale)
         return y.reshape(*lead, N).astype(out_dtype)
 
-    bv = min(block_v, V)
-    bn = min(block_n, N)
+    auto_bv, auto_bn = _auto_tiles(M, V, N, d)
+    bv = auto_bv if block_v == "auto" else min(block_v, V)
+    bn = auto_bn if block_n == "auto" else min(block_n, N)
     pad_v = (-V) % bv
     pad_n = (-N) % bn
     if pad_v:

@@ -17,19 +17,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import ops as core_ops
 from repro.core.vq import VQWeight
 from repro.kernels.fused_vq_matmul.kernel import fused_vq_matmul_pallas
 from repro.kernels.fused_vq_matmul.ref import fused_vq_matmul_ref
-
-# Cap the OC scratch per pallas_call at 8 MiB: the scratch holds
-# C * m_tile * V_padded * 2^n fp32, i.e. C*m_tile*V_padded*2^n*4 bytes.
-_MAX_OC_BYTES = 8 * 1024 * 1024
-
-
-def _m_tile(C: int, V: int, k: int) -> int:
-    """Largest m_tile with C * m_tile * V * k * 4 bytes <= the scratch cap."""
-    per_m = C * V * k * 4
-    return max(1, _MAX_OC_BYTES // max(per_m, 1))
 
 
 @functools.partial(
@@ -39,12 +30,17 @@ def fused_vq_matmul(
     x: jax.Array,
     vq: VQWeight,
     *,
-    block_v: int = 32,
-    block_n: int = 512,
+    block_v="auto",
+    block_n="auto",
     interpret: bool = False,
     use_pallas: bool = True,
     out_dtype=None,
 ) -> jax.Array:
+    """block_v/block_n default to "auto": core_ops.select_fused_tiles sizes
+    the v/n tiles AND the m-tiling jointly from the VMEM footprint model
+    (OC scratch C*m_tile*V_pad*2^n fp32 capped at FUSED_OC_SCRATCH_BYTES,
+    gathered tile capped at FUSED_GATHER_TILE_BYTES). Explicit ints pin
+    the tile sizes (tests / TPU tuning)."""
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     K, N, V, d, C = vq.K, vq.N, vq.V, vq.d, vq.C
@@ -60,8 +56,9 @@ def fused_vq_matmul(
         y = fused_vq_matmul_ref(X, vq.codebooks, I, scale)
         return y.reshape(*lead, N).astype(out_dtype)
 
-    bv = min(block_v, V)
-    bn = min(block_n, N)
+    _, auto_bv, auto_bn = core_ops.select_fused_tiles(M, V, N, C, k)
+    bv = auto_bv if block_v == "auto" else min(block_v, V)
+    bn = auto_bn if block_n == "auto" else min(block_n, N)
     pad_v = (-V) % bv
     pad_n = (-N) % bn
     if pad_v:
@@ -74,7 +71,14 @@ def fused_vq_matmul(
 
     # M-tiling bounds the OC scratch at C*mt*V_padded*k*4 bytes per call;
     # this Python loop is unrolled under jit (one pallas_call per M-tile).
-    mt = _m_tile(C, X.shape[1], k)
+    # Recomputed from the ACTUAL padded V (an explicit block_v may pad
+    # more than the auto sizing assumed), then capped so the realized
+    # gathered tile (C, mt, bv, bn) also honors the budget — the actual
+    # padded V can be smaller than select_fused_tiles assumed, which
+    # would otherwise inflate mt past the tile the budget was checked at.
+    mt = core_ops.fused_m_tile(C, X.shape[1], k)
+    while mt > 1 and 4 * C * mt * bv * bn > core_ops.FUSED_GATHER_TILE_BYTES:
+        mt = max(1, mt // 2)
     cb = vq.codebooks.astype(jnp.float32)
     outs = [
         fused_vq_matmul_pallas(

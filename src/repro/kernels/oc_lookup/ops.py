@@ -6,8 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import ops as core_ops
 from repro.kernels.oc_lookup.kernel import oc_lookup_pallas
 from repro.kernels.oc_lookup.ref import oc_lookup_ref
+
+
+def _auto_tiles(M: int, V: int, N: int, C: int, k: int):
+    """This kernel never M-tiles (the wrapper receives the full O), so its
+    per-grid-step VMEM is the O BlockSpec (C, M, bv, k) fp32 plus the
+    gathered (C, M, bv, bn) fp32 — i.e. 4*C*M*bv*(k + bn) bytes, with the
+    FULL M, unlike the fused kernel's m_tile-bounded scratch. Start at
+    the paper's v=32 / 512-lane tiles and shrink bn, then bv."""
+    bv, bn = min(32, V), min(512, N)
+    while bn > 128 and 4 * C * M * bv * (k + bn) > core_ops.FUSED_GATHER_TILE_BYTES:
+        bn //= 2
+    while bv > 8 and 4 * C * M * bv * (k + bn) > core_ops.FUSED_GATHER_TILE_BYTES:
+        bv //= 2
+    return bv, min(bn, N)
 
 
 @functools.partial(
@@ -18,11 +33,14 @@ def oc_lookup(
     I: jax.Array,
     scale: jax.Array,
     *,
-    block_v: int = 32,
-    block_n: int = 512,
+    block_v="auto",
+    block_n="auto",
     interpret: bool = False,
     use_pallas: bool = True,
 ) -> jax.Array:
+    """block_v/block_n accept "auto" (VMEM footprint model below) or
+    explicit ints; non-divisible V/N are padded (padded O rows are zero
+    -> contribute 0)."""
     C, M, V, k = O.shape
     N = I.shape[-1]
     # indices stream in their storage dtype (uint8 for n<=8); the kernel
@@ -31,8 +49,9 @@ def oc_lookup(
     if not use_pallas:
         return oc_lookup_ref(O, I, scale)
 
-    bv = min(block_v, V)
-    bn = min(block_n, N)
+    auto_bv, auto_bn = _auto_tiles(M, V, N, C, k)
+    bv = auto_bv if block_v == "auto" else min(block_v, V)
+    bn = auto_bn if block_n == "auto" else min(block_n, N)
     pad_v = (-V) % bv
     pad_n = (-N) % bn
     if pad_v:

@@ -109,13 +109,21 @@ class RunConfig:
     attn_skip_oob_chunks: bool = False  # hillclimb: skip fully-masked chunks
     remat: bool = True
     interpret: bool = False      # pallas interpret mode (CPU validation)
-    block_v: int = 32
+    # EVA epilogue policy (core/ops.py select_epilogue): "auto" picks per
+    # shape — direct gather at M < d (v-blocked gather once the (C,M,V,N)
+    # intermediate spills the cache budget), the v-blocked reconstruct-
+    # and-GEMM "recon" at M >= d (the batched-decode regime), and "flat"
+    # inside a mesh context. "direct"/"flat"/"blocked"/"recon" force a
+    # formulation. epilogue_block_v pins the v-block height and requires
+    # epilogue="blocked"/"recon" on the jnp impl (None -> auto-sized);
+    # under impl="pallas" it sizes the fused kernel's v-tiles instead.
+    epilogue: str = "auto"
+    epilogue_block_v: Optional[int] = None
     # ---- perf-iteration levers (EXPERIMENTS.md §Perf) ----
     lm_head_last_only: bool = False  # prefill: project only the last token
     mla_absorb: bool = False         # MLA decode in latent space (weight absorption)
     kv_cache_int8: bool = False      # int8-quantized KV cache (GQA decode)
     kv_cache_int4: bool = False      # int4-quantized KV cache (more aggressive)
-    eva_flat_gather: bool = False    # flat-index epilogue gather (SPMD-friendly)
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)
@@ -156,10 +164,14 @@ def linear(p: Params, x: jax.Array, rc: RunConfig, *, out_dtype=None) -> jax.Arr
         vq: VQWeight = p["vq"]
         if rc.mode == "decode" or rc.vq_mode != "none":
             mode = rc.vq_mode if rc.vq_mode != "none" else "eva"
+            # an epilogue/epilogue_block_v conflict raises loudly inside
+            # resolve_epilogue (jnp) — no pre-check duplicated here
             y = core_ops.vq_matmul(
                 x, vq, mode=mode, out_dtype=out_dtype,
                 impl=rc.impl, interpret=rc.interpret,
-                flat_gather=rc.eva_flat_gather,
+                epilogue=rc.epilogue,
+                block_v=(rc.epilogue_block_v if rc.epilogue_block_v
+                         is not None else "auto"),
             )
         else:  # pragma: no cover - vq params always run a vq mode
             y = core_ops.dequant_matmul(x, vq, out_dtype=out_dtype)
@@ -543,11 +555,18 @@ def mla_fwd(
     H = cfg.num_heads
     dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
 
-    q = linear(p["wq"], x, rc).reshape(B, S, H, dn + dr)
+    if "wq_kva" in p:
+        # grouped q + kv_a (both consume x): ONE wide EVA matmul sliced at
+        # the recorded (H*(dn+dr), r+dr) split points — the VQ-GEMM /
+        # output-codebook stage is shared by both projections.
+        q, kv_a = grouped_linear(p["wq_kva"], x, rc)
+        q = q.reshape(B, S, H, dn + dr)
+    else:
+        q = linear(p["wq"], x, rc).reshape(B, S, H, dn + dr)
+        kv_a = linear(p["wkv_a"], x, rc)                  # (B, S, r + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    kv_a = linear(p["wkv_a"], x, rc)                      # (B, S, r + dr)
     latent, k_rope = kv_a[..., :r], kv_a[..., r:]
     latent = rmsnorm(p["kv_norm"], latent, cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)

@@ -173,9 +173,16 @@ def mlstm_block_fwd(p, x, rc: RunConfig, cfg: ModelConfig, state=None):
     xn = cm.rmsnorm(p["norm"], x, cfg.norm_eps)
     h = cm.linear(p["up_h"], xn, rc)
     g = cm.linear(p["up_g"], xn, rc)
-    q = cm.linear(p["wq"], h, rc).reshape(B, S, H, hd)
-    k = cm.linear(p["wk"], h, rc).reshape(B, S, H, hd)
-    v = cm.linear(p["wv"], h, rc).reshape(B, S, H, hd)
+    if "wqkv" in p:
+        # grouped q/k/v (all consume h; quantize pass family anchored by
+        # the "w_if" sibling): one wide EVA matmul, outputs sliced at the
+        # recorded (di, di, di) split points.
+        q, k, v = cm.grouped_linear(p["wqkv"], h, rc)
+    else:
+        q, k, v = (cm.linear(p[w], h, rc) for w in ("wq", "wk", "wv"))
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, H, hd)
+    v = v.reshape(B, S, H, hd)
     log_i, log_f = _mlstm_gates(p, h, H)
 
     if state is None:

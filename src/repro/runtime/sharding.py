@@ -138,6 +138,10 @@ def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
                 K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
         elif div(V):
+            # misaligned-grouped (or otherwise un-N-shardable) fallback:
+            # V-sharded contraction -> the output (and bias add) is not
+            # column-sharded, so the bias must not be either
+            col_ok = False
             out["vq"] = VQWeight(
                 idx=_pad_front((ma, None), nd_idx),
                 codebooks=P(*([None] * nd_cb)),
@@ -145,6 +149,7 @@ def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
                 K=vq.K, N=vq.N, d=vq.d, n=vq.n, splits=vq.splits,
             )
         else:
+            col_ok = False
             out["vq"] = VQWeight(
                 idx=P(*([None] * nd_idx)),
                 codebooks=P(*([None] * nd_cb)),

@@ -81,6 +81,13 @@ class Engine:
         self.positions[slot] = req.prompt_len
         self.last_token[slot] = tok
 
+    def _stopped(self, req: Request) -> bool:
+        """Stopping condition over the tokens generated so far."""
+        return len(req.generated) >= req.max_new_tokens or (
+            self.ecfg.eos_id >= 0 and bool(req.generated)
+            and req.generated[-1] == self.ecfg.eos_id
+        )
+
     # -------------------------------------------------------------- decode
     def _decode_impl(self, params, tokens, positions, caches, *, rc):
         logits, new_caches = self.model.decode(params, tokens, positions, caches, rc)
@@ -89,15 +96,30 @@ class Engine:
 
     def step(self) -> List[Request]:
         """One engine tick: admit+prefill new requests, one batched decode
-        step, retire finished requests. Returns finished requests."""
+        step, retire finished requests. Returns finished requests.
+
+        A request retires in the SAME step its stopping condition is met
+        (eos emitted / max_new_tokens reached) — including straight out of
+        prefill — so it never occupies a slot for an extra batched decode
+        step. Free slots are masked out of the decode inputs (token 0 at
+        position 0) instead of replaying their stale last_token."""
+        finished: List[Request] = []
         for slot in self.sched.admit():
-            self._prefill_one(slot, self.sched.slots[slot])
+            req = self.sched.slots[slot]
+            self._prefill_one(slot, req)
+            # eos in the prefill-sampled token / max_new_tokens == 1:
+            # retire before the request joins a decode batch at all
+            if self._stopped(req):
+                finished.append(self.sched.finish(slot))
 
         active = self.sched.active_slots()
-        finished: List[Request] = []
         if active:
-            tokens = jnp.asarray(self.last_token[:, None], jnp.int32)
-            positions = jnp.asarray(self.positions[:, None], jnp.int32)
+            mask = np.zeros_like(self.last_token, dtype=bool)
+            mask[active] = True
+            tokens = jnp.asarray(np.where(mask, self.last_token, 0)[:, None],
+                                 jnp.int32)
+            positions = jnp.asarray(np.where(mask, self.positions, 0)[:, None],
+                                    jnp.int32)
             next_tok, self.caches = self._decode_fn(
                 self.params, tokens, positions, self.caches
             )
@@ -105,15 +127,12 @@ class Engine:
             for b in active:
                 req = self.sched.slots[b]
                 self.positions[b] += 1
-                # request finished BEFORE consuming this step's token?
-                if len(req.generated) >= req.max_new_tokens or (
-                    self.ecfg.eos_id >= 0 and req.generated
-                    and req.generated[-1] == self.ecfg.eos_id
-                ):
-                    finished.append(self.sched.finish(b))
-                    continue
                 req.generated.append(int(next_tok[b]))
                 self.last_token[b] = int(next_tok[b])
+                # retire in the step the stopping condition is met — the
+                # slot is free for admission on the next tick
+                if self._stopped(req):
+                    finished.append(self.sched.finish(b))
         return finished
 
     # ---------------------------------------------------------- high level

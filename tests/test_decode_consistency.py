@@ -114,6 +114,8 @@ def test_quantized_decode_pallas_impl():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow  # ~58 s (W+24 single-token steps); the fast SWA smoke
+# stays in test_prefill_decode_matches_full_forward[mixtral_8x22b]
 def test_ring_cache_swa_long_decode():
     """SWA ring cache: decoding far past the window stays consistent with
     a full-cache reference restricted to the window."""

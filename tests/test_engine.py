@@ -75,6 +75,116 @@ def test_scheduler_slot_lifecycle():
     assert s.idle
 
 
+class _CountingModel:
+    """Deterministic stub: next-token = (last_token + 1) % vocab. Lets the
+    slot-retirement tests place eos mid-stream exactly and count batched
+    decode steps."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init_cache(self, slots, max_len):
+        return {"state": jnp.zeros((1, slots, 1), jnp.float32)}
+
+    def prefill(self, params, batch, rc):
+        nxt = (batch["tokens"][:, -1] + 1) % self.cfg.vocab_size
+        logits = jax.nn.one_hot(nxt, self.cfg.vocab_size)[:, None, :]
+        return logits, {"state": jnp.zeros((1, 1, 1), jnp.float32)}
+
+    def decode(self, params, tokens, positions, caches, rc):
+        nxt = (tokens[:, 0] + 1) % self.cfg.vocab_size
+        logits = jax.nn.one_hot(nxt, self.cfg.vocab_size)[:, None, :]
+        return logits, caches
+
+
+def _counting_engine(eos_id, num_slots=2, max_len=64):
+    cfg = dataclasses.replace(get_smoke_config("llama2_7b"), vocab_size=32)
+    model = _CountingModel(cfg)
+    eng = Engine(model, {}, RunConfig(mode="decode", remat=False),
+                 EngineConfig(num_slots=num_slots, max_len=max_len,
+                              eos_id=eos_id))
+    # count batched decode steps
+    inner = eng._decode_fn
+    calls = {"n": 0}
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return inner(*a, **kw)
+
+    eng._decode_fn = counted
+    return eng, calls
+
+
+def test_slot_retires_in_same_step_as_eos():
+    """Regression (slot-retirement bug): a request whose eos arrives
+    mid-stream must free its slot in the step the token is generated —
+    previously it occupied the slot for one extra batched decode step
+    (with positions bumped for it anyway)."""
+    eng, calls = _counting_engine(eos_id=9, num_slots=1)
+    # prompt ends at 5 -> prefill emits 6; decode emits 7, 8, 9(eos)
+    out = eng.generate([np.array([5], np.int32)], max_new_tokens=10)
+    assert list(out.values()) == [[6, 7, 8, 9]]
+    # exactly 3 decode steps (7, 8, 9) — the old check-before-consume loop
+    # needed a 4th step just to notice the eos
+    assert calls["n"] == 3
+
+
+def test_eos_slot_frees_for_queued_request_immediately():
+    """With one slot and two requests, the freed slot admits the queued
+    request on the tick right after eos — no dead step in between."""
+    eng, calls = _counting_engine(eos_id=9, num_slots=1)
+    out = eng.generate([np.array([6], np.int32), np.array([20], np.int32)],
+                       max_new_tokens=4)
+    # first: prefill 7, decode 8, 9(eos); second: prefill 21, decode 22..24
+    assert list(out.values()) == [[7, 8, 9], [21, 22, 23, 24]]
+    assert calls["n"] == 2 + 3  # no wasted step between the requests
+
+    # a fresh engine serving only the second request needs the same 3
+    # decode steps — the queued request paid zero extra latency
+    eng2, calls2 = _counting_engine(eos_id=9, num_slots=1)
+    eng2.generate([np.array([20], np.int32)], max_new_tokens=4)
+    assert calls2["n"] == 3
+
+
+def test_eos_in_prefill_token_never_decodes():
+    """A request whose very first (prefill-sampled) token is eos — or
+    whose budget is a single token — retires without any decode step."""
+    eng, calls = _counting_engine(eos_id=9)
+    out = eng.generate([np.array([8], np.int32)], max_new_tokens=10)
+    assert list(out.values()) == [[9]]
+    assert calls["n"] == 0
+
+    eng2, calls2 = _counting_engine(eos_id=-1)
+    out2 = eng2.generate([np.array([3], np.int32)], max_new_tokens=1)
+    assert list(out2.values()) == [[4]]
+    assert calls2["n"] == 0
+
+
+def test_free_slots_fed_masked_tokens():
+    """Free slots must not replay their stale last_token through decode:
+    the engine masks them to token 0 / position 0."""
+    eng, _ = _counting_engine(eos_id=9, num_slots=2)
+    seen = []
+    inner = eng._decode_fn
+
+    def spy(params, tokens, positions, caches):
+        seen.append((np.asarray(tokens).ravel().copy(),
+                     np.asarray(positions).ravel().copy()))
+        return inner(params, tokens, positions, caches)
+
+    eng._decode_fn = spy
+    # slot 0 hits eos (9) in the second decode step; slot 1 keeps going
+    eng.generate([np.array([6], np.int32), np.array([20], np.int32)],
+                 max_new_tokens=6)
+    assert len(seen) == 5  # slot 1: 22, 23, 24, 25, 26
+    # while slot 0 is live its lane carries the real last_token
+    assert seen[0][0][0] == 7 and seen[1][0][0] == 8
+    # after slot 0 retires, its lane must carry the masked 0 at position
+    # 0 — never its stale eos token / bumped position
+    for tok, pos in seen[2:]:
+        assert tok[0] == 0 and pos[0] == 0, (tok, pos)
+
+
 def test_engine_vq_quantized(setup):
     """The engine runs end-to-end on EVA-quantized weights."""
     cfg, model, params, rc = setup

@@ -1,0 +1,245 @@
+"""Epilogue-selection subsystem: every epilogue formulation (direct /
+flat / blocked at several block sizes / recon / "auto") must match the
+dequant oracle on odd V/N, grouped splits and M in {1, 8, 32}; the
+selection heuristic's regime boundaries are pinned; conflicting argument
+combinations raise loudly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.vq import split_grouped, synthetic_vq
+
+KEY = jax.random.PRNGKey(0)
+
+# (K, N, splits): odd V (K=80 -> V=10, K=88 -> V=11) and N that pad
+# against the explicit block sizes below; one grouped family with odd
+# member widths.
+SHAPES = [
+    (80, 70, ()),
+    (88, 132, ()),
+    (96, 96, (50, 26, 20)),
+]
+
+# (epilogue kwarg, block_v kwarg)
+EPILOGUE_ARGS = [
+    ("direct", "auto"),
+    ("flat", "auto"),
+    ("blocked", 4),
+    ("blocked", 8),
+    ("blocked", 32),
+    ("blocked", "auto"),
+    ("recon", 4),
+    ("recon", "auto"),
+    ("auto", "auto"),
+]
+
+
+def _mk(K, N, splits, M):
+    vq = synthetic_vq(KEY, K, N, d=8, n=8, C=2, splits=splits)
+    x = jax.random.normal(jax.random.fold_in(KEY, K * N + M), (M, K),
+                          jnp.float32)
+    return x, vq
+
+
+class TestEquivalence:
+    @pytest.mark.parametrize("K,N,splits", SHAPES)
+    @pytest.mark.parametrize("M", [1, 8, 32])
+    @pytest.mark.parametrize("epilogue,block_v", EPILOGUE_ARGS)
+    def test_epilogue_matches_dequant_oracle(self, K, N, splits, M,
+                                             epilogue, block_v):
+        x, vq = _mk(K, N, splits, M)
+        got = ops.eva_matmul(x, vq, epilogue=epilogue, block_v=block_v,
+                             out_dtype=jnp.float32)
+        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_legacy_argument_surface_still_works(self):
+        x, vq = _mk(80, 70, (), 3)
+        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        for kw in (dict(block_v=None), dict(block_v=5),
+                   dict(flat_gather=True), dict()):
+            got = ops.eva_matmul(x, vq, out_dtype=jnp.float32, **kw)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_grouped_auto_epilogue_matches_per_member_oracles(self):
+        """One wide auto-epilogue matmul + split == independent dequant
+        oracles per member, in both the direct (M=1) and recon (M=32)
+        regimes."""
+        for M in (1, 32):
+            x, vq = _mk(96, 96, (50, 26, 20), M)
+            y = ops.eva_matmul(x, vq, out_dtype=jnp.float32)
+            parts = ops.split_grouped_outputs(y, vq)
+            for part, member in zip(parts, split_grouped(vq)):
+                ref = ops.dequant_matmul(x, member, out_dtype=jnp.float32)
+                np.testing.assert_allclose(np.asarray(part), np.asarray(ref),
+                                           rtol=2e-4, atol=2e-4)
+
+    def test_auto_is_default_through_vq_matmul(self):
+        x, vq = _mk(80, 70, (), 8)
+        got = ops.vq_matmul(x, vq, out_dtype=jnp.float32)
+        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestSelection:
+    """Pin the heuristic's regime boundaries (measured crossovers on the
+    CI host, benchmarks/measured.py batch + crossover sweeps)."""
+
+    def test_single_token_decode_is_direct(self):
+        # paper decode shape M=1, llama-2-7b layer: footprint 17 MB
+        assert ops.select_epilogue(1, 512, 4096, 2, 256, 8) == ("direct", None)
+
+    def test_small_batch_stays_direct_below_spill(self):
+        # M=4, K=N=4096: 71 MB gathered footprint, still direct (measured
+        # ~36 ms direct vs ~180 ms blocked)
+        assert ops.select_epilogue(4, 512, 4096, 2, 256, 8) == ("direct", None)
+
+    def test_small_batch_spills_to_blocked_on_wide_n(self):
+        # M=4, N=11008: 184 MB footprint thrashes -> v-blocked gather
+        kind, bv = ops.select_epilogue(4, 512, 11008, 2, 256, 8)
+        assert kind == "blocked"
+        assert ops._MIN_BLOCK_V <= bv < 512
+        # the live slab must fit the slab budget
+        assert 4 * 2 * 4 * bv * (11008 + 256) <= ops.EPILOGUE_SLAB_BYTES
+
+    def test_batched_decode_is_recon(self):
+        # M >= d: gather work C*M*V*N exceeds the C*V*N*d reconstruction
+        # gathers -> slab-tiled reconstruct-and-GEMM (the measured/batch32
+        # fix: recon ~72 ms vs dequant ~260 ms vs direct ~790 ms)
+        for M in (8, 16, 32):
+            kind, bv = ops.select_epilogue(M, 512, 4096, 2, 256, 8)
+            assert kind == "recon"
+            assert 1 <= bv <= 512
+            # reconstructed slab (bv*d, N) fp32 within its cache target
+            assert 4 * bv * 8 * 4096 <= ops.RECON_SLAB_BYTES
+
+    def test_boundary_is_at_m_equals_d(self):
+        assert ops.select_epilogue(7, 512, 4096, 2, 256, 8)[0] != "recon"
+        assert ops.select_epilogue(8, 512, 4096, 2, 256, 8)[0] == "recon"
+        # d=4 weights cross over at M=4
+        assert ops.select_epilogue(4, 512, 4096, 2, 256, 4)[0] == "recon"
+
+    def test_distributed_is_flat(self):
+        for M in (1, 32):
+            assert ops.select_epilogue(M, 512, 4096, distributed=True) == \
+                ("flat", None)
+
+    def test_block_v_shrinks_with_n(self):
+        _, bv_small = ops.select_epilogue(4, 2048, 11008, 2, 256, 8)
+        _, bv_large = ops.select_epilogue(4, 2048, 44032, 2, 256, 8)
+        assert bv_large <= bv_small
+
+    def test_tiny_shapes_never_scan(self):
+        # smoke-model shapes: one block would cover V -> direct
+        assert ops.select_epilogue(1, 8, 64, 2, 256, 8) == ("direct", None)
+
+    def test_gather_footprint_model(self):
+        assert ops.epilogue_gather_bytes(1, 512, 4096, 2) == \
+            4 * 2 * 512 * (4096 + 256)
+
+    def test_auto_under_mesh_context_selects_flat(self):
+        """Inside an active mesh context the auto resolution must pick the
+        SPMD-friendly flat epilogue (the V-block scans would reshape a
+        sharded V axis into collectives)."""
+        from jax.sharding import Mesh
+
+        args = dict(M=32, V=512, N=4096, C=2, k=256, d=8)
+        assert ops.resolve_epilogue("auto", "auto", False, **args)[0] == "recon"
+        with Mesh(np.array(jax.devices()[:1]), ("model",)):
+            assert ops.resolve_epilogue("auto", "auto", False, **args) == \
+                ("flat", None)
+            assert ops.resolve_epilogue(None, "auto", False, **args) == \
+                ("flat", None)
+            # explicit requests still win over the mesh preference
+            assert ops.resolve_epilogue("recon", 64, False, **args) == \
+                ("recon", 64)
+
+
+class TestResolveErrors:
+    """Satellite: the epilogue arguments are one coherent parameter with
+    loud errors on conflicting combinations."""
+
+    def _call(self, **kw):
+        x, vq = _mk(80, 70, (), 2)
+        return ops.eva_matmul(x, vq, **kw)
+
+    def test_flat_gather_with_block_v_is_loud(self):
+        # used to silently drop flat_gather
+        with pytest.raises(ValueError, match="flat_gather.*block_v"):
+            self._call(flat_gather=True, block_v=8)
+
+    def test_block_v_with_non_blocked_epilogue(self):
+        for epi in ("direct", "flat", "auto"):
+            with pytest.raises(ValueError, match="block_v"):
+                self._call(epilogue=epi, block_v=8)
+
+    def test_flat_gather_with_other_epilogue(self):
+        with pytest.raises(ValueError, match="flat_gather"):
+            self._call(epilogue="blocked", flat_gather=True)
+
+    def test_none_block_v_with_non_direct_epilogue(self):
+        # block_v=None (legacy direct) conflicts with every explicitly
+        # requested non-direct epilogue — including "auto", which would
+        # otherwise silently drop it
+        for epi in ("blocked", "recon", "auto", "flat"):
+            with pytest.raises(ValueError, match="contradictory"):
+                self._call(epilogue=epi, block_v=None)
+        # ...and is consistent with an explicit direct request
+        x, vq = _mk(80, 70, (), 2)
+        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        got = ops.eva_matmul(x, vq, epilogue="direct", block_v=None,
+                             out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_unknown_epilogue(self):
+        with pytest.raises(ValueError, match="unknown epilogue"):
+            self._call(epilogue="bogus")
+
+    def test_bad_block_v_values(self):
+        with pytest.raises(ValueError, match="block_v"):
+            self._call(block_v=0)
+        with pytest.raises(ValueError, match="block_v"):
+            self._call(block_v="huge")
+
+    def test_pallas_rejects_jnp_epilogues(self):
+        with pytest.raises(ValueError, match="pallas"):
+            self._call(impl="pallas", epilogue="flat", interpret=True)
+
+    def test_pallas_validates_block_v(self):
+        # the pallas branch shares the jnp path's loud block_v contract
+        for bad in (0, -3, "huge"):
+            with pytest.raises(ValueError, match="block_v"):
+                self._call(impl="pallas", interpret=True, block_v=bad)
+
+    def test_pallas_accepts_auto_and_block_v(self):
+        x, vq = _mk(80, 70, (), 2)
+        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        for kw in (dict(), dict(block_v=4)):
+            got = ops.eva_matmul(x, vq, impl="pallas", interpret=True,
+                                 out_dtype=jnp.float32, **kw)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+
+class TestFusedTiles:
+    """The fused Pallas wrapper's auto tile/m-tile sizing."""
+
+    def test_oc_scratch_budget_respected(self):
+        mt, bv, bn = ops.select_fused_tiles(64, 512, 4096, 2, 256)
+        v_pad = 512 + ((-512) % bv)
+        assert 2 * mt * v_pad * 256 * 4 <= ops.FUSED_OC_SCRATCH_BYTES
+        assert 2 * mt * bv * bn * 4 <= ops.FUSED_GATHER_TILE_BYTES
+
+    def test_small_shapes_single_tile(self):
+        mt, bv, bn = ops.select_fused_tiles(1, 10, 70, 2, 256)
+        assert mt == 1 and bv == 10 and bn == 70
+
+    def test_block_v_upper_bound_is_paper_tile(self):
+        _, bv, _ = ops.select_fused_tiles(1, 512, 4096, 2, 256)
+        assert bv <= ops.DEFAULT_BLOCK_V

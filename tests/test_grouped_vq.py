@@ -209,6 +209,62 @@ class TestGroupedCheckpoint:
                                       np.asarray(vq.idx))
 
 
+class TestGroupedNewFamilies:
+    """xlstm mLSTM wq/wk/wv and MLA wq/wkv_a grouped families: the grouped
+    block forward must match the same block run on per-projection members
+    (split_grouped keeps the identical codebooks/indices, so this is an
+    exact per-projection oracle through the real model code)."""
+
+    @staticmethod
+    def _ungroup(block, gkey, member_names):
+        out = {k: v for k, v in block.items() if k != gkey}
+        members = split_grouped(block[gkey]["vq"])
+        for name, m in zip(member_names, members):
+            out[name] = {"vq": m}
+        return out
+
+    def test_xlstm_mlstm_grouped_matches_split_members(self):
+        from repro.configs import get_smoke_config
+        from repro.core.quantize import quantize_params
+        from repro.models import xlstm
+        from repro.models.common import RunConfig
+
+        cfg = dataclasses.replace(get_smoke_config("xlstm_125m"),
+                                  dtype="float32")
+        block = xlstm.make_mlstm_block(KEY, cfg)
+        pg = quantize_params({"groups": {"b": block}}, cfg,
+                             method="synthetic", key=KEY)["groups"]["b"]
+        assert pg["wqkv"]["vq"].splits == (128, 128, 128)
+        ps = self._ungroup(pg, "wqkv", ("wq", "wk", "wv"))
+        x = jax.random.normal(KEY, (2, 3, cfg.d_model), jnp.float32)
+        rc = RunConfig(mode="decode", vq_mode="eva", remat=False)
+        yg, _ = xlstm.mlstm_block_fwd(pg, x, rc, cfg)
+        ys, _ = xlstm.mlstm_block_fwd(ps, x, rc, cfg)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(ys),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_mla_grouped_matches_split_members(self):
+        from repro.configs import get_smoke_config
+        from repro.core.quantize import quantize_params
+        from repro.models.common import RunConfig, make_mla, mla_fwd
+
+        cfg = dataclasses.replace(get_smoke_config("deepseek_v2_lite_16b"),
+                                  dtype="float32")
+        block = make_mla(KEY, cfg)
+        pg = quantize_params({"layers": {"attn": block}}, cfg,
+                             method="synthetic", key=KEY)["layers"]["attn"]
+        assert pg["wq_kva"]["vq"].splits == (192, 80)
+        ps = self._ungroup(pg, "wq_kva", ("wq", "wkv_a"))
+        x = jax.random.normal(KEY, (2, 3, cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32)[None], (2, 3))
+        rc = RunConfig(mode="prefill", vq_mode="eva", remat=False,
+                       attn_chunk=8)
+        yg, _ = mla_fwd(pg, x, rc, cfg, positions=pos)
+        ys, _ = mla_fwd(ps, x, rc, cfg, positions=pos)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(ys),
+                                   rtol=1e-4, atol=1e-4)
+
+
 class TestGroupedModelDecode:
     def test_grouped_decode_eva_equals_dequant(self):
         """Model-level parity on grouped params: the single-wide-matmul

@@ -23,6 +23,8 @@ SHAPE_SWEEP = [
     (96, 80, 3, 8, 5, 2),        # non-divisible N vs block sizes
     (64, 512, 8, 4, 8, 1),       # d=4 (GPTVQ-4D config)
     (160, 100, 2, 8, 8, 4),      # C=4 (4-bit)
+    (88, 130, 3, 8, 8, 2),       # V=11, N=130: pads BOTH v and n tiles
+    (104, 52, 2, 8, 8, 1),       # V=13 odd vs block_v, N < block_n
 ]
 
 DTYPE_SWEEP = [jnp.float32, jnp.bfloat16]
@@ -86,6 +88,41 @@ def test_int8_gemm_kernel(M, K, N, dtype):
     ref = core_ops.int8_matmul(x, w, out_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("K,N", [(88, 130), (104, 52), (80, 70)])
+def test_kernel_wrappers_auto_tiles_on_odd_shapes(K, N):
+    """Regression (odd-shape padding): every kernel wrapper with "auto"
+    tile selection pads non-divisible V/N instead of tripping the
+    kernels' V % block_v == 0 / N % block_n == 0 asserts."""
+    x, vq = _mk(K, N, 3, 8, 8, 2, jnp.float32)
+    ref = core_ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+    got_f = fused_vq_matmul(x, vq, interpret=True, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    got_d = dequant_gemv(x, vq, interpret=True, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    O = vq_gemm(x, vq.codebooks, use_pallas=False)
+    got_o = oc_lookup(O, vq.idx, vq.scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bv,bn", [(4, 64), (32, 512), (16, 48)])
+def test_oc_and_dequant_kernels_pad_non_divisible_blocks(bv, bn):
+    """Explicit block sizes that do NOT divide V/N (V=11 vs bv=4/32,
+    N=130 vs bn=64/512/48) must be padded the way fused_vq_matmul pads."""
+    x, vq = _mk(88, 130, 2, 8, 8, 2, jnp.float32)
+    ref = core_ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+    got_o = oc_lookup(vq_gemm(x, vq.codebooks, use_pallas=False), vq.idx,
+                      vq.scale, interpret=True, block_v=bv, block_n=bn)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    got_d = dequant_gemv(x, vq, interpret=True, block_v=bv, block_n=bn,
+                         out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_kernel_equals_paper_formulation_end_to_end():

@@ -59,9 +59,30 @@ class TestEligibility:
         q = quantize_params(params, cfg, method="synthetic", key=KEY)
         g0 = q["groups"]["b0_mlstm"]
         assert "w" in g0["w_if"]          # per-head gates stay dense
-        assert isinstance(g0["wq"]["vq"], VQWeight)
+        # mLSTM wq/wk/wv (same input h) grouped into one wide leaf
+        assert "wq" not in g0
+        wqkv = g0["wqkv"]["vq"]
+        assert isinstance(wqkv, VQWeight)
+        di = 2 * cfg.d_model
+        assert wqkv.splits == (di, di, di)
         g1 = q["groups"]["b1_slstm"]
         assert "rz" in g1                  # recurrent weights untouched
+        assert "wqkv" not in g1            # sLSTM wz/wi/wf/wo never grouped
+
+    def test_mla_q_kva_grouped(self):
+        cfg, model, params = _params("deepseek_v2_lite_16b")
+        q = quantize_params(params, cfg, method="synthetic", key=KEY)
+        for block in (q["layers"]["attn"], q["pre_layers"]["attn"]):
+            assert "wq" not in block and "wkv_a" not in block
+            vq = block["wq_kva"]["vq"]
+            assert isinstance(vq, VQWeight)
+            assert vq.splits == (
+                cfg.num_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim),
+                cfg.kv_lora_rank + cfg.qk_rope_dim,
+            )
+            # wkv_b / wo stay independent leaves
+            assert isinstance(block["wkv_b"]["vq"], VQWeight)
+            assert block["wkv_b"]["vq"].splits == ()
 
 
 class TestStructure:

@@ -34,6 +34,8 @@ def test_serve_end_to_end_vq():
     assert all(len(v) == 5 for v in out["results"].values())
 
 
+@pytest.mark.slow  # ~106 s: the slowest tier-1 offender; the fast serve
+# smoke above keeps end-to-end engine coverage in every run
 def test_quantize_then_serve_trained_model(tmp_path):
     """The full paper pipeline: train dense -> VQ-quantize -> EVA decode.
     The quantized model's decode stays close to the dense model on a
