@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ops as core_ops
+from repro.core import plan as plan_mod
 from repro.core.vq import split_grouped, synthetic_vq
 
 
@@ -26,6 +27,14 @@ def _time(fn, *args, iters=5, warmup=2):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters
+
+
+def _plan_desc(x, vq, **policy_kw) -> str:
+    """The plan the auto policy would choose for this call — the single
+    source of epilogue/backend naming in these rows (no re-implemented
+    selection logic here)."""
+    policy = plan_mod.PlanPolicy(vq_mode="eva", **policy_kw)
+    return plan_mod.plan_vq(x, vq, policy).describe()
 
 
 def run(report):
@@ -43,7 +52,8 @@ def run(report):
         rows.append((K, N, t_dense, t_deq, t_eva))
         report(f"measured/eva_{K}x{N}", t_eva * 1e6,
                f"dense_us={t_dense*1e6:.0f};dequant_us={t_deq*1e6:.0f};"
-               f"speedup_vs_dequant={t_deq/t_eva:.2f}")
+               f"speedup_vs_dequant={t_deq/t_eva:.2f};"
+               f"plan={_plan_desc(x, vq)}")
 
     # batched decode (continuous batching regime): the AUTO epilogue must
     # stay >= 1x vs dequant across the M sweep. At M>=8 the direct
@@ -58,11 +68,10 @@ def run(report):
         t_dir = _time(jax.jit(
             lambda a, b: core_ops.eva_matmul(a, b, epilogue="direct")), x, vq)
         t_deq = _time(jax.jit(core_ops.dequant_matmul), x, vq)
-        kind, bv = core_ops.select_epilogue(M, vq.V, N, vq.C, 2 ** vq.n, vq.d)
         report(f"measured/batch{M}_{K}x{N}", t_eva * 1e6,
                f"dequant_us={t_deq*1e6:.0f};speedup={t_deq/t_eva:.2f};"
                f"direct_us={t_dir*1e6:.0f};"
-               f"epilogue={kind if bv is None else f'{kind}_v{bv}'}")
+               f"plan={_plan_desc(x, vq)}")
 
     # grouped QKV decode: ONE wide VQ-GEMM + OC lookup over [Wq|Wk|Wv]
     # (shared codebook set, core/vq.py grouped layout) vs three separate
@@ -107,30 +116,31 @@ def run(report):
                 t_g.append(_time(f_grp, x, g, iters=iters, warmup=0))
                 t_s.append(_time(f_sep, x, *members, iters=iters, warmup=0))
             collapse = core_ops.grouped_compute_collapse_ratio(g.splits, g.n)
-            kind, bv = core_ops.select_epilogue(M, g.V, g.N, g.C, 2 ** g.n,
-                                                g.d)
             report(f"measured/grouped_{tag}_m{M}", min(t_g) * 1e6,
                    f"separate_us={min(t_s)*1e6:.0f};"
                    f"speedup_vs_separate={min(t_s)/min(t_g):.2f};"
                    f"grouped_collapse_ratio={collapse:.0f};"
-                   f"epilogue={kind if bv is None else f'{kind}_v{bv}'}")
+                   f"plan={_plan_desc(x, g)}")
 
-    # pallas kernels, interpret mode (validation-path timing)
-    from repro.kernels.fused_vq_matmul import fused_vq_matmul
+    # pallas kernels, interpret mode (validation-path timing): time the
+    # PLANNED execution so the reported plan's tiles are exactly the
+    # configuration that was measured
+    fused_policy = plan_mod.PlanPolicy(vq_mode="eva", impl="pallas",
+                                       interpret=True)
     vq_s = synthetic_vq(key, 256, 512, d=8, n=8, C=2)
     x_s = jax.random.normal(key, (1, 256), jnp.float32)
-    t_fused = _time(
-        lambda a, b: fused_vq_matmul(a, b, interpret=True, block_v=8,
-                                     block_n=128), x_s, vq_s, iters=3)
+    pl_s = plan_mod.plan_vq(x_s, vq_s, fused_policy)
+    t_fused = _time(pl_s.execute, x_s, vq_s, iters=3)
     report("measured/pallas_fused_interpret_256x512", t_fused * 1e6,
-           "interpret-mode (CPU emulation, not TPU-representative)")
+           "interpret-mode (CPU emulation, not TPU-representative);"
+           f"plan={pl_s.describe()}")
 
     # grouped family through the fused Pallas kernel (interpret): one call,
     # one OC scratch fill, the N sweep covers all three members
     g_s = synthetic_vq(key, 256, 384, d=8, n=8, C=2, splits=(256, 64, 64))
-    t_gfused = _time(
-        lambda a, b: fused_vq_matmul(a, b, interpret=True, block_v=8,
-                                     block_n=128), x_s, g_s, iters=3)
+    pl_g = plan_mod.plan_vq(x_s, g_s, fused_policy)
+    t_gfused = _time(pl_g.execute, x_s, g_s, iters=3)
     report("measured/pallas_fused_grouped_interpret_256x384", t_gfused * 1e6,
-           "interpret-mode; uint8 index tiles, grouped qkv sweep")
+           "interpret-mode; uint8 index tiles, grouped qkv sweep;"
+           f"plan={pl_g.describe()}")
     return rows

@@ -2,17 +2,62 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. The analytic accelerator
 model (accel_model.py) mirrors the paper's simulator; `measured/*` rows
-are real wall-clock CPU executions of the JAX ops.
+are real wall-clock CPU executions of the JAX ops and carry the chosen
+``plan=`` (core/plan.py MatmulPlan.describe()) per row.
+
+``--json <path>`` additionally writes the rows machine-readably (the
+``derived`` field parsed into key/value pairs — chosen plan, speedups,
+baseline timings) so the perf trajectory is tracked across PRs, e.g.
+
+    python -m benchmarks.run measured --json BENCH_measured.json
 
 Usage:
-    python -m benchmarks.run              # every module
-    python -m benchmarks.run measured     # just the named module(s)
+    python -m benchmarks.run                    # every module
+    python -m benchmarks.run measured fig10     # just the named module(s)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
-from typing import Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
+
+JSON_SCHEMA = "eva-bench-rows/v1"
+
+
+def parse_derived(derived: str) -> Dict[str, Any]:
+    """Parse a ';'-separated derived string into a dict: ``k=v`` pairs
+    become fields (numeric where possible), bare text accumulates under
+    "note"."""
+    out: Dict[str, Any] = {}
+    notes: List[str] = []
+    for part in derived.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+        else:
+            notes.append(part)
+    if notes:
+        out["note"] = "; ".join(notes)
+    return out
+
+
+def write_json(path: str, rows: List[Dict[str, Any]],
+               failures: Sequence[str]) -> None:
+    with open(path, "w") as f:
+        json.dump({"schema": JSON_SCHEMA, "rows": rows,
+                   "failures": list(failures)}, f, indent=1)
+        f.write("\n")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -21,9 +66,6 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         measured, tbl_iii_vq_configs, tbl_v_accuracy_proxy,
         tbl_viii_throughput, tbl_x_oc_advantage,
     )
-
-    def report(name: str, us: float, derived: str = ""):
-        print(f"{name},{us:.3f},{derived}", flush=True)
 
     modules = [
         ("tbl_iii", tbl_iii_vq_configs),
@@ -37,23 +79,44 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         ("tbl_v", tbl_v_accuracy_proxy),
         ("measured", measured),
     ]
-    selected = set(sys.argv[1:] if argv is None else argv)
     known = {name for name, _ in modules}
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("modules", nargs="*", metavar="MODULE",
+                    help=f"module(s) to run (default all): {sorted(known)}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (derived fields parsed)")
+    args = ap.parse_args(list(argv) if argv is not None else None)
+
+    selected = set(args.modules)
     unknown = selected - known
     if unknown:
         sys.exit(f"unknown benchmark module(s) {sorted(unknown)}; "
                  f"choose from {sorted(known)}")
+
+    rows: List[Dict[str, Any]] = []
+    current_module = [""]
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.3f},{derived}", flush=True)
+        rows.append({"module": current_module[0], "name": name,
+                     "us_per_call": round(us, 3),
+                     "derived": parse_derived(derived)})
+
     print("name,us_per_call,derived")
     failures = []
     for name, mod in modules:
         if selected and name not in selected:
             continue
+        current_module[0] = name
         try:
             mod.run(report)
         except Exception as e:  # keep the harness running
             failures.append((name, e))
             report(f"{name}/ERROR", -1.0, f"{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        write_json(args.json, rows, [f"{n}: {e}" for n, e in failures])
     if failures:
         sys.exit(1)
 

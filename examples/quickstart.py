@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.plan import PlanPolicy
 from repro.core.quantize import compressed_model_bytes, count_vq_layers
 from repro.data import DataConfig, global_batch_at
 from repro.models import build_model
@@ -66,13 +67,19 @@ def main():
     pos = jnp.full((2, 1), prompt.shape[1], jnp.int32)
     tok = prompt[:, -1:]
 
+    # execution policy is one typed object now: RunConfig(plan_policy=...)
+    # — each linear fetches a cached MatmulPlan (backend + resolved tiles)
     l_eva, _ = model.decode(qparams, tok, pos, caches,
-                            RunConfig(mode="decode", vq_mode="eva"))
+                            RunConfig(mode="decode",
+                                      plan_policy=PlanPolicy(vq_mode="eva")))
     l_deq, _ = model.decode(qparams, tok, pos, caches,
-                            RunConfig(mode="decode", vq_mode="dequant"))
+                            RunConfig(mode="decode",
+                                      plan_policy=PlanPolicy(vq_mode="dequant")))
     l_pal, _ = model.decode(qparams, tok, pos, caches,
-                            RunConfig(mode="decode", vq_mode="eva",
-                                      impl="pallas", interpret=True))
+                            RunConfig(mode="decode",
+                                      plan_policy=PlanPolicy(
+                                          vq_mode="eva", impl="pallas",
+                                          interpret=True)))
     print(f"EVA vs dequant max |Δlogit| : {float(np.max(np.abs(l_eva-l_deq))):.2e}")
     print(f"EVA jnp vs Pallas kernel    : {float(np.max(np.abs(l_eva-l_pal))):.2e}")
     print("next tokens (EVA):   ", np.argmax(np.asarray(l_eva[:, 0]), -1))

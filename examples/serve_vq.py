@@ -7,12 +7,14 @@ active slots (the paper's multi-batch weight-tile reuse, Fig. 7(c)).
     PYTHONPATH=src python examples/serve_vq.py --arch mixtral-8x22b
 """
 import argparse
+import logging
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.plan import PlanPolicy
 from repro.models import build_model
 from repro.models.common import RunConfig
 from repro.serve import Engine, EngineConfig
@@ -26,12 +28,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
 
+    # INFO logging shows the engine's pre-planned prefill/decode matmul
+    # plans (backend + resolved tiles per layer shape) at startup
+    logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.quantize(model.init(key), method="synthetic", key=key)
 
-    rc = RunConfig(mode="decode", vq_mode="eva", remat=False, attn_chunk=32)
+    rc = RunConfig(mode="decode", plan_policy=PlanPolicy(vq_mode="eva"),
+                   remat=False, attn_chunk=32)
     eng = Engine(model, params, rc,
                  EngineConfig(num_slots=args.slots, max_len=64))
 

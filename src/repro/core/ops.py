@@ -11,20 +11,28 @@ Four execution paths, all algebraically computing ``y = x @ W_hat``:
                     the conflict-free output-codebook lookup + add-only
                     reduction epilogue (Fig. 1(c)).
 
-`impl` selects the pure-jnp expression ("jnp", used by distributed lowering
-and as the oracle) or the Pallas TPU kernel ("pallas", validated in
-interpret mode on CPU; compiled for TPU on real hardware).
+Formulation *selection* lives in `core/plan.py`: a frozen LinearSpec +
+PlanPolicy resolve through an LRU-cached Planner to a MatmulPlan carrying
+the chosen backend and every resolved number. This module keeps
 
-The jnp eva_matmul additionally carries an epilogue-selection subsystem
-(select_epilogue / resolve_epilogue): four algebraically-identical
-epilogue formulations (direct / flat / v-blocked gather / v-blocked
-reconstruct-GEMM) chosen per shape from explicit gather-work and
-cache-footprint cost models, so "auto" callers stay >= 1x vs the dequant
-baseline across the whole M sweep (the PR-1 batched-decode regression).
+  * the executable formulations themselves (`eva_epilogue_exec` runs one
+    resolved jnp epilogue; the Pallas kernels live under `kernels/`),
+  * the epilogue cost models (`select_epilogue` + the auto block sizers)
+    that the jnp EVA backend registrations consult, and
+  * `eva_matmul` / `vq_matmul` as thin convenience wrappers over
+    `Planner.plan(...).execute(...)` — one deprecation cycle still
+    accepts the legacy `flat_gather=` / `block_v=None` spellings with a
+    DeprecationWarning.
+
+The four jnp epilogue formulations (direct / flat / v-blocked gather /
+v-blocked reconstruct-GEMM) are algebraically identical and chosen per
+shape from explicit gather-work and cache-footprint cost models, so
+"auto" callers stay >= 1x vs the dequant baseline across the whole M
+sweep (the PR-1 batched-decode regression).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -67,8 +75,9 @@ DEFAULT_BLOCK_V = 32
 #
 # select_epilogue() picks among them from two explicit cost models —
 # gather work (C*M*V*N vs the C*V*N*d reconstruction gathers) and the
-# cache footprint of the gathered intermediate — so callers (vq_matmul ->
-# linear -> RunConfig(epilogue="auto")) never hand-tune block_v per
+# cache footprint of the gathered intermediate — called ONLY from the
+# jnp EVA backend registrations in core/plan.py, so callers (linear ->
+# RunConfig plan_policy epilogue="auto") never hand-tune block_v per
 # shape. Measured regime table (K=N=4096, C=2, this CI host, min-of-7):
 #
 #     M   direct    flat  blocked(best)  recon(best)  dequant
@@ -108,6 +117,14 @@ RECON_SLAB_BYTES = 16 * 1024 * 1024
 # dominates.
 _MIN_BLOCK_V = 8
 
+# Shared VMEM budgets for the Pallas kernels' tile models (the fused
+# wrapper's OC scratch holds C*m_tile*V_pad*2^n fp32 and must fit
+# comfortably under the ~16 MB/core VMEM; the gathered/reconstructed tile
+# is each kernel's live slab). The per-kernel tile *functions* live with
+# their wrappers in kernels/*/ops.py — only the budgets are shared.
+FUSED_OC_SCRATCH_BYTES = 8 * 1024 * 1024
+FUSED_GATHER_TILE_BYTES = 2 * 1024 * 1024
+
 
 def epilogue_gather_bytes(M: int, V: int, N: int, C: int, k: int = 256) -> int:
     """Cache footprint of one un-blocked epilogue pass: the gathered
@@ -119,8 +136,8 @@ def _pow2_floor(x: int) -> int:
     return 1 << (int(x).bit_length() - 1)
 
 
-def _auto_block_v(M: int, V: int, N: int, C: int, k: int = 256,
-                  *, slab_bytes: Optional[int] = None) -> int:
+def auto_block_v(M: int, V: int, N: int, C: int, k: int = 256,
+                 *, slab_bytes: Optional[int] = None) -> int:
     """Largest v-block whose live gathered slab (C, M, bv, N+k) fp32 fits
     the slab budget, clamped to [_MIN_BLOCK_V, V] and rounded down to a
     power of two (tiling-friendly; the scan pads the remainder)."""
@@ -131,7 +148,7 @@ def _auto_block_v(M: int, V: int, N: int, C: int, k: int = 256,
     return max(_MIN_BLOCK_V, _pow2_floor(bv))
 
 
-def _auto_recon_block_v(V: int, N: int, d: int) -> int:
+def auto_recon_block_v(V: int, N: int, d: int) -> int:
     """v-block for the recon epilogue: size the reconstructed (bv*d, N)
     fp32 slab to RECON_SLAB_BYTES, clamped to [32, V], power of two."""
     bv = max(32, RECON_SLAB_BYTES // max(4 * d * N, 1))
@@ -166,11 +183,11 @@ def select_epilogue(
     if distributed:
         return "flat", None
     if M >= d:
-        return "recon", _auto_recon_block_v(V, N, d)
+        return "recon", auto_recon_block_v(V, N, d)
     budget = cache_bytes or EPILOGUE_CACHE_BYTES
     if epilogue_gather_bytes(M, V, N, C, k) <= budget:
         return "direct", None
-    bv = _auto_block_v(M, V, N, C, k)
+    bv = auto_block_v(M, V, N, C, k)
     if bv >= V:  # one block == direct, skip the scan machinery
         return "direct", None
     return "blocked", bv
@@ -195,117 +212,61 @@ def _in_mesh_context() -> bool:
         return False
 
 
-def _validate_block_v(block_v) -> None:
-    if isinstance(block_v, bool) or not (
-        block_v is None or block_v == "auto" or isinstance(block_v, int)
-    ):
-        raise ValueError(f"block_v must be 'auto', None or an int, got {block_v!r}")
-    if isinstance(block_v, int) and block_v <= 0:
-        raise ValueError(f"block_v must be positive, got {block_v}")
+_UNSET = object()  # sentinel: legacy kwarg not passed at all
 
 
-def resolve_epilogue(
-    epilogue: Optional[str],
-    block_v,
-    flat_gather: bool,
-    *,
-    M: int, V: int, N: int, C: int, k: int, d: int = 8,
-) -> Tuple[str, Optional[int]]:
-    """Normalize eva_matmul's epilogue arguments to (epilogue, bv), with
-    loud errors on conflicting combinations.
+def _legacy_eva_args(epilogue, block_v, flat_gather, impl: str
+                     ) -> Tuple[str, Optional[int]]:
+    """Normalize the legacy eva_matmul argument surface to the plan API's
+    (epilogue, block_v) pair.
 
-    `epilogue`   : None (legacy knobs decide) | "auto" | one of EPILOGUES.
-    `block_v`    : "auto" (default) | None (legacy: force direct) | int
-                   (explicit v-block, only coherent with the v-blocked
-                   epilogues "blocked" and "recon").
-    `flat_gather`: legacy alias for epilogue="flat".
-    """
-    _validate_block_v(block_v)
-
-    if epilogue is None:
-        # legacy argument surface: block_v + flat_gather
-        if flat_gather and isinstance(block_v, int):
-            raise ValueError(
-                "flat_gather=True conflicts with an explicit block_v="
-                f"{block_v}: the flat epilogue has no v-blocking (this "
-                "combination used to silently drop flat_gather)")
+    The removed spellings — ``flat_gather=`` and ``block_v=None`` — are
+    accepted for ONE deprecation cycle with a DeprecationWarning; the
+    plan API itself (PlanPolicy) knows only ``epilogue="flat"`` /
+    ``"direct"``. Conflicting combinations raise the same loud
+    ValueErrors as before."""
+    if flat_gather is not _UNSET:
+        warnings.warn(
+            "eva_matmul(flat_gather=True) is deprecated; pass "
+            "epilogue='flat' instead" if flat_gather else
+            "eva_matmul(flat_gather=False) is deprecated; drop the kwarg "
+            "(it is the default)", DeprecationWarning, stacklevel=3)
         if flat_gather:
-            return "flat", None
-        if block_v is None:
-            return "direct", None
-        if isinstance(block_v, int):
-            return "blocked", min(block_v, V)
-        return select_epilogue(M, V, N, C, k, d,
-                               distributed=_in_mesh_context())
-
-    if epilogue not in EPILOGUES + ("auto",):
-        raise ValueError(
-            f"unknown epilogue {epilogue!r}; expected 'auto' or one of {EPILOGUES}")
-    if flat_gather and epilogue != "flat":
-        raise ValueError(
-            f"flat_gather=True conflicts with epilogue={epilogue!r}; "
-            "drop flat_gather (it is the legacy alias for epilogue='flat')")
-    if isinstance(block_v, int) and epilogue not in ("blocked", "recon"):
-        raise ValueError(
-            f"explicit block_v={block_v} conflicts with epilogue="
-            f"{epilogue!r}; block_v only applies to the v-blocked "
-            "epilogues ('blocked', 'recon')")
-    if block_v is None and epilogue != "direct":
-        raise ValueError(
-            f"epilogue={epilogue!r} with block_v=None is contradictory "
-            "(block_v=None is the legacy spelling of the direct epilogue); "
-            "pass block_v='auto' or an int")
-
-    if epilogue == "auto":
-        return select_epilogue(M, V, N, C, k, d,
-                               distributed=_in_mesh_context())
-    if epilogue == "blocked":
-        if isinstance(block_v, int):
-            return "blocked", min(block_v, V)
-        return "blocked", _auto_block_v(M, V, N, C, k)
-    if epilogue == "recon":
-        if isinstance(block_v, int):
-            return "recon", min(block_v, V)
-        return "recon", _auto_recon_block_v(V, N, d)
-    return epilogue, None
-
-
-# VMEM budgets for the fused Pallas kernel's tile sizing (threaded through
-# kernels/fused_vq_matmul/ops.py). The OC scratch holds C*m_tile*V_pad*2^n
-# fp32 and must fit comfortably under the ~16 MB/core VMEM; the gathered
-# tile (C, m_tile, block_v, block_n) is the epilogue's live slab.
-FUSED_OC_SCRATCH_BYTES = 8 * 1024 * 1024
-FUSED_GATHER_TILE_BYTES = 2 * 1024 * 1024
-
-
-def fused_m_tile(C: int, v_padded: int, k: int) -> int:
-    """Largest m_tile whose VMEM OC scratch (C, m_tile, v_padded, k) fp32
-    stays under FUSED_OC_SCRATCH_BYTES. The single source of truth for
-    the fused wrapper's M-tiling (it passes the ACTUAL padded V)."""
-    return max(1, FUSED_OC_SCRATCH_BYTES // max(C * v_padded * k * 4, 1))
-
-
-def select_fused_tiles(M: int, V: int, N: int, C: int, k: int = 256
-                       ) -> Tuple[int, int, int]:
-    """(m_tile, block_v, block_n) for the fused Pallas wrapper.
-
-    m_tile caps the VMEM OC scratch (C * m_tile * V_pad * k fp32) at
-    FUSED_OC_SCRATCH_BYTES (via fused_m_tile); block_v/block_n bound the
-    gathered epilogue tile (C, m_tile, block_v, block_n) fp32 at
-    FUSED_GATHER_TILE_BYTES, shrinking block_v first (the paper's v=32
-    tile height is the upper bound), then block_n (512-lane default)."""
-    bn = min(512, N)
-    bv = min(DEFAULT_BLOCK_V, V)
-    m_tile = min(fused_m_tile(C, V + ((-V) % bv), k), M)
-
-    def tile_bytes(bv_, bn_):
-        return 4 * C * m_tile * bv_ * bn_
-
-    while bv > _MIN_BLOCK_V and tile_bytes(bv, bn) > FUSED_GATHER_TILE_BYTES:
-        bv //= 2
-    while bn > 128 and tile_bytes(bv, bn) > FUSED_GATHER_TILE_BYTES:
-        bn //= 2
-    return m_tile, bv, min(bn, N)
+            if isinstance(block_v, int) and not isinstance(block_v, bool):
+                raise ValueError(
+                    "flat_gather=True conflicts with an explicit block_v="
+                    f"{block_v}: the flat epilogue has no v-blocking (this "
+                    "combination used to silently drop flat_gather)")
+            if epilogue not in (None, "flat"):
+                raise ValueError(
+                    f"flat_gather=True conflicts with epilogue={epilogue!r}; "
+                    "drop flat_gather (it is the legacy alias for "
+                    "epilogue='flat')")
+            epilogue = "flat"
+    if block_v is None:
+        if epilogue not in (None, "direct"):
+            raise ValueError(
+                f"epilogue={epilogue!r} with block_v=None is contradictory "
+                "(block_v=None is the legacy spelling of the direct "
+                "epilogue); pass block_v='auto' or an int")
+        if impl == "pallas":
+            raise ValueError(
+                "block_v=None (the legacy spelling of epilogue='direct') "
+                "does not apply to impl='pallas' — the fused kernel always "
+                "tiles; pass block_v='auto' or an int")
+        warnings.warn(
+            "eva_matmul(block_v=None) is deprecated; pass epilogue='direct' "
+            "instead", DeprecationWarning, stacklevel=3)
+        return "direct", None
+    # "auto" -> None (auto-sized); ints pass through; anything else is left
+    # for PlanPolicy's loud block_v validation
+    bv = None if block_v == "auto" else block_v
+    if epilogue is None:
+        if isinstance(bv, int) and not isinstance(bv, bool) and impl == "jnp":
+            # legacy: a bare int block_v selected the v-blocked gather scan
+            return "blocked", bv
+        return "auto", bv
+    return epilogue, bv
 
 
 def fp_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
@@ -403,86 +364,32 @@ def _recon_epilogue(x: jax.Array, vq: VQWeight, bv: int) -> jax.Array:
     return acc * vq.scale[None, :].astype(jnp.float32)
 
 
-def eva_matmul(
+def eva_epilogue_exec(
     x: jax.Array,
     vq: VQWeight,
     *,
-    epilogue: Optional[str] = None,
-    block_v="auto",
+    kind: str,
+    block_v: Optional[int] = None,
     out_dtype=None,
-    impl: str = "jnp",
-    interpret: bool = False,
-    flat_gather: bool = False,
 ) -> jax.Array:
-    """EVA decode matmul: y = x @ W_hat via output-codebook lookup.
+    """Execute ONE resolved jnp EVA formulation — no selection here.
 
       O = X·B                         (VQ-GEMM, MXU)
       y[m,j] = s[j] * sum_c sum_v O[c,m,v, I[c,v,j]]   (epilogue, add-only)
 
-    Epilogue selection (see `select_epilogue` for the cost models and the
-    measured regime table):
-
-      epilogue="auto" / block_v="auto" (the default): choose per shape —
-        direct gather in the M < d decode regime (gather work C*M*V*N
-        below the C*V*N*d reconstruction gathers; v-blocked once the
-        gathered intermediate spills EPILOGUE_CACHE_BYTES), and the
-        v-blocked reconstruct-and-GEMM at M >= d (the batched
-        continuous-batching regime, where the gather epilogues used to
-        regress below the dequant baseline).
-      epilogue="direct" (or legacy block_v=None): 4-D take_along_axis,
-        fused by XLA into the reduction.
-      epilogue="flat" (or legacy flat_gather=True): single-axis gather
-        with precomputed flat indices — GSPMD partitions 1-D gathers with
-        a replicated operand locally, where the 4-D take_along_axis
-        reshards 3-tuple s32 gather indices across the mesh; use under
-        pjit (a V-block scan would force index all-gathers when V is
-        sharded).
-      epilogue="blocked" (or legacy block_v=<int>): lax.scan over V
-        tiles of height block_v (mirrors the paper's v=32 tiling);
-        block_v="auto" sizes the tile from the cache budget.
-      epilogue="recon": v-blocked reconstruct-and-GEMM — rebuilds
-        (block_v*d, N) slabs of W_hat from the centroid tables and
-        accumulates x @ w_slab; algebraically the dequant formulation
-        but slab-tiled cache-resident (~3.5-4x faster than
-        dequant_matmul at M in {8, 32}).
-
-    Conflicting combinations (e.g. flat_gather with an explicit block_v,
-    which used to be silently ignored) raise ValueError. The Pallas impl
-    always tiles; an explicit int block_v is forwarded to the kernel
-    wrapper, any other epilogue request is invalid there.
-    """
+    ``kind`` is one of EPILOGUES and ``block_v`` the resolved v-block for
+    the v-blocked kinds; both come frozen out of a MatmulPlan (the jnp
+    EVA backend registrations in core/plan.py resolve them once per
+    (spec, policy) via select_epilogue / the auto block sizers)."""
     K = vq.K
     M = x.size // K
     V, N, C = vq.V, vq.N, vq.C
     k = vq.codebooks.shape[-1] if hasattr(vq.codebooks, "shape") else 2 ** vq.n
-
-    if impl == "pallas":
-        from repro.kernels.fused_vq_matmul import ops as fused_ops
-
-        if flat_gather or epilogue not in (None, "auto"):
-            raise ValueError(
-                "impl='pallas' always runs the fused tiled kernel; "
-                f"epilogue={epilogue!r}/flat_gather={flat_gather} do not "
-                "apply (pass block_v to size its v-tiles)")
-        _validate_block_v(block_v)  # same loud contract as the jnp path
-        if block_v is None:
-            raise ValueError(
-                "block_v=None (the legacy spelling of epilogue='direct') "
-                "does not apply to impl='pallas' — the fused kernel always "
-                "tiles; pass block_v='auto' or an int")
-        return fused_ops.fused_vq_matmul(
-            x, vq, block_v=block_v, out_dtype=out_dtype, interpret=interpret)
-    if impl != "jnp":
-        raise ValueError(f"unknown impl {impl!r}")
-
-    kind, bv = resolve_epilogue(epilogue, block_v, flat_gather,
-                                M=M, V=V, N=N, C=C, k=k, d=vq.d)
-
     out_dtype = out_dtype or x.dtype
     lead_shape = x.shape[:-1]
 
     if kind == "recon":
-        y = _recon_epilogue(x, vq, bv)
+        y = _recon_epilogue(x, vq, block_v)
         return y.reshape(*lead_shape, N).astype(out_dtype)
 
     O = compute_output_codebook(x, vq)  # (C, M, V, k)
@@ -498,7 +405,8 @@ def eva_matmul(
     elif kind == "direct":
         g = jnp.take_along_axis(O, I[:, None].astype(jnp.int32), axis=3)
         acc = g.sum(axis=(0, 2))                             # (M, N)
-    else:  # blocked scan
+    elif kind == "blocked":
+        bv = block_v
         # pad V to a multiple of bv (index 0 with zeroed O rows)
         rem = (-V) % bv
         if rem:
@@ -515,8 +423,51 @@ def eva_matmul(
 
         acc0 = jnp.zeros((M, N), jnp.float32)
         acc, _ = jax.lax.scan(body, acc0, (O_blk, I_blk))
+    else:
+        raise ValueError(f"unknown epilogue kind {kind!r}")
     y = acc * vq.scale[None, :].astype(jnp.float32)
     return y.reshape(*lead_shape, N).astype(out_dtype)
+
+
+def eva_matmul(
+    x: jax.Array,
+    vq: VQWeight,
+    *,
+    epilogue: Optional[str] = None,
+    block_v="auto",
+    out_dtype=None,
+    impl: str = "jnp",
+    interpret: bool = False,
+    flat_gather=_UNSET,
+) -> jax.Array:
+    """EVA decode matmul: y = x @ W_hat via output-codebook lookup.
+
+    Thin convenience wrapper over ``Planner.plan(...).execute(...)`` —
+    derives a LinearSpec from (x, vq), builds a PlanPolicy from the
+    keyword surface and executes the cached plan. See core/plan.py for
+    the dispatch layer and `select_epilogue` for the cost models / the
+    measured regime table of the jnp epilogues:
+
+      epilogue="auto" / block_v="auto" (the default): choose per shape —
+        direct gather in the M < d decode regime, v-blocked gather once
+        the gathered intermediate spills the cache budget, the v-blocked
+        reconstruct-and-GEMM at M >= d, flat inside a mesh context.
+      epilogue="direct" | "flat" | "blocked" | "recon": force a
+        formulation; an int ``block_v`` pins the v-block of the
+        v-blocked kinds.
+      impl="pallas": the fused tiled kernel (an int ``block_v`` pins its
+        v-tiles; jnp epilogue requests are invalid there).
+
+    The legacy ``flat_gather=`` and ``block_v=None`` spellings are
+    accepted for one deprecation cycle (DeprecationWarning) and map to
+    epilogue="flat" / "direct"; conflicting combinations raise ValueError.
+    """
+    from repro.core import plan as plan_mod
+
+    epi, bv = _legacy_eva_args(epilogue, block_v, flat_gather, impl)
+    policy = plan_mod.PlanPolicy(vq_mode="eva", impl=impl, epilogue=epi,
+                                 block_v=bv, interpret=interpret)
+    return plan_mod.plan_vq(x, vq, policy, out_dtype=out_dtype).execute(x, vq)
 
 
 def split_grouped_outputs(y: jax.Array, vq: VQWeight) -> Tuple[jax.Array, ...]:
@@ -542,15 +493,28 @@ def vq_matmul(
     impl: str = "jnp",
     interpret: bool = False,
 ) -> jax.Array:
-    """Unified entry point used by the model layers. `epilogue`/`block_v`
-    configure the EVA epilogue (see eva_matmul; "auto" selects per shape)
-    and are ignored by the dequant baseline, which has no epilogue."""
+    """Unified VQ matmul entry point — a thin wrapper over
+    ``Planner.plan(...).execute(...)`` (model layers dispatch through
+    core/plan.py directly; this surface remains for scripts/tests).
+
+    mode="eva" takes the epilogue surface of `eva_matmul`; for
+    mode="dequant" the jnp baseline has no epilogue (an int ``block_v``
+    pins the Pallas dequant kernel's v-tiles — impl="pallas" now actually
+    reaches the `dequant_gemv` kernel instead of being silently ignored).
+    """
+    from repro.core import plan as plan_mod
+
     if mode == "eva":
-        return eva_matmul(x, vq, epilogue=epilogue, block_v=block_v,
-                          out_dtype=out_dtype, impl=impl, interpret=interpret)
-    if mode == "dequant":
-        return dequant_matmul(x, vq, out_dtype=out_dtype)
-    raise ValueError(f"unknown vq matmul mode {mode!r}")
+        epi, bv = _legacy_eva_args(epilogue, block_v, _UNSET, impl)
+    elif mode == "dequant":
+        epi = "auto"
+        bv = block_v if isinstance(block_v, int) \
+            and not isinstance(block_v, bool) else None
+    else:
+        raise ValueError(f"unknown vq matmul mode {mode!r}")
+    policy = plan_mod.PlanPolicy(vq_mode=mode, impl=impl, epilogue=epi,
+                                 block_v=bv, interpret=interpret)
+    return plan_mod.plan_vq(x, vq, policy, out_dtype=out_dtype).execute(x, vq)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,578 @@
+"""Plan-once / execute-many dispatch for every model-layer matmul.
+
+EVA's speedup comes from picking the right *formulation* per shape —
+VQ-GEMM + structured lookup at small M, reconstruct-and-GEMM at large M,
+the fused Pallas kernel on an accelerator, INT8 GEMM for prefill — and
+then executing that frozen choice on every step (the VQ-LLM "select a
+code variant per shape, execute the cached selection" structure). This
+module is the selection layer:
+
+  LinearSpec   : frozen, hashable description of one matmul site —
+                 (M, K, N), weight kind (dense / int8 / vq), the VQ
+                 geometry (C, V, 2^n, d, grouped splits), dtypes and the
+                 mesh-context flag. Derived from ``(x, params)`` at trace
+                 time; equal specs hash equal, so a spec is a cache key.
+  PlanPolicy   : frozen, hashable execution policy (vq_mode, impl,
+                 epilogue, block_v, int8_prefill, interpret). Statically
+                 contradictory policies raise ValueError at construction.
+  MatmulPlan   : the concrete executable: chosen backend plus every
+                 resolved number (epilogue kind + block_v for jnp;
+                 m/v/n tiles for the Pallas kernels — nothing re-derived
+                 at execute time) and cost-model estimates for
+                 introspection. ``plan.execute(x, leaf)`` runs it;
+                 ``plan.describe()`` names it for logs/benchmarks.
+  Planner      : LRU cache mapping (LinearSpec, PlanPolicy) -> MatmulPlan.
+                 Same spec+policy returns the SAME plan object; inside a
+                 jitted decode step the planner is only consulted while
+                 tracing, never on the executed path.
+
+Backends register via ``register_backend(name, matcher, planner_fn)``.
+The pure-jnp formulations are registered here; the Pallas kernels
+register themselves from ``kernels/*/ops.py`` (each owns its tile model)
+and are imported lazily on first use, so ``core`` never imports kernel
+modules at module scope.
+
+Model layers (``models/common.py linear/grouped_linear``) fetch a plan
+per call site instead of threading string knobs; ``eva_matmul`` /
+``vq_matmul`` in ``core/ops.py`` remain as thin convenience wrappers
+over ``Planner.plan(...).execute(...)``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import importlib
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.core.ops import EPILOGUES
+from repro.core.vq import VQWeight
+
+WEIGHT_KINDS = ("dense", "int8", "vq")
+VQ_MODES = ("none", "eva", "dequant")
+IMPLS = ("jnp", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Spec / policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Shape + weight-kind signature of one matmul site.
+
+    ``kind`` is the *resolved* weight kind: "dense" (fp path), "int8"
+    (a dense weight executed through the INT8 prefill GEMM) or "vq".
+    The VQ geometry fields are zero for non-VQ kinds. ``in_mesh``
+    records whether the spec was derived inside an active mesh context
+    (pjit/shard_map) — the SPMD-friendly flat epilogue is preferred
+    there, exactly like the pre-plan string-knob behavior."""
+
+    M: int
+    K: int
+    N: int
+    kind: str                      # dense | int8 | vq
+    x_dtype: str
+    out_dtype: str
+    C: int = 0
+    V: int = 0
+    k: int = 0                     # 2^n centroids per codebook
+    d: int = 0
+    splits: Tuple[int, ...] = ()   # grouped-family member widths
+    in_mesh: bool = False
+
+    def __post_init__(self):
+        if self.kind not in WEIGHT_KINDS:
+            raise ValueError(
+                f"unknown weight kind {self.kind!r}; expected one of {WEIGHT_KINDS}")
+
+    @classmethod
+    def for_vq(cls, vq: VQWeight, *, M: int, x_dtype, out_dtype,
+               in_mesh: Optional[bool] = None) -> "LinearSpec":
+        k = vq.codebooks.shape[-1] if hasattr(vq.codebooks, "shape") else 2 ** vq.n
+        return cls(
+            M=int(M), K=vq.K, N=vq.N, kind="vq",
+            x_dtype=jnp.dtype(x_dtype).name, out_dtype=jnp.dtype(out_dtype).name,
+            C=vq.C, V=vq.V, k=int(k), d=vq.d, splits=tuple(vq.splits),
+            in_mesh=ops._in_mesh_context() if in_mesh is None else in_mesh,
+        )
+
+    @classmethod
+    def for_dense(cls, w, *, M: int, x_dtype, out_dtype, kind: str = "dense",
+                  in_mesh: Optional[bool] = None) -> "LinearSpec":
+        K, N = int(w.shape[-2]), int(w.shape[-1])
+        return cls(
+            M=int(M), K=K, N=N, kind=kind,
+            x_dtype=jnp.dtype(x_dtype).name, out_dtype=jnp.dtype(out_dtype).name,
+            in_mesh=ops._in_mesh_context() if in_mesh is None else in_mesh,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPolicy:
+    """Execution policy for one matmul (the collapsed RunConfig knobs).
+
+    ``vq_mode``  : "eva" | "dequant" | "none" ("none" resolves by run
+                   mode: EVA in decode, the dequant baseline elsewhere).
+    ``impl``     : "jnp" | "pallas".
+    ``epilogue`` : "auto" or one of core/ops.EPILOGUES. Only the EVA jnp
+                   backends consume it; impl="pallas" always runs the
+                   fused tiled kernel and accepts only "auto".
+    ``block_v``  : None (auto-sized) or a pinned v-block height — on jnp
+                   only coherent with the v-blocked epilogues
+                   ("blocked"/"recon"); on Pallas it pins the kernel's
+                   v-tiles.
+    ``int8_prefill`` : route dense prefill matmuls through the INT8 GEMM.
+    ``interpret``    : Pallas interpret mode (CPU validation).
+
+    Statically contradictory combinations raise ValueError here, so a
+    bad policy is loud at construction (not at the first matmul).
+    """
+
+    vq_mode: str = "none"
+    impl: str = "jnp"
+    epilogue: str = "auto"
+    block_v: Optional[int] = None
+    int8_prefill: bool = False
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.vq_mode not in VQ_MODES:
+            raise ValueError(
+                f"unknown vq_mode {self.vq_mode!r}; expected one of {VQ_MODES}")
+        if self.impl not in IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; expected one of {IMPLS}")
+        if self.epilogue not in EPILOGUES + ("auto",):
+            raise ValueError(
+                f"unknown epilogue {self.epilogue!r}; expected 'auto' or one "
+                f"of {EPILOGUES}")
+        if self.block_v is not None:
+            if isinstance(self.block_v, bool) or not isinstance(self.block_v, int):
+                raise ValueError(
+                    f"block_v must be None ('auto') or an int, got {self.block_v!r}")
+            if self.block_v <= 0:
+                raise ValueError(f"block_v must be positive, got {self.block_v}")
+            if self.impl == "jnp" and self.vq_mode != "dequant" \
+                    and self.epilogue not in ("blocked", "recon"):
+                # dequant is exempt: its jnp baseline has no epilogue and
+                # documents block_v as ignored; on Pallas (any mode)
+                # block_v pins the kernel's v-tiles
+                raise ValueError(
+                    f"explicit block_v={self.block_v} conflicts with epilogue="
+                    f"{self.epilogue!r}; block_v only applies to the v-blocked "
+                    "epilogues ('blocked', 'recon') on impl='jnp'")
+
+    def resolve_vq_mode(self, mode: str) -> "PlanPolicy":
+        """Resolve vq_mode="none" by run mode (decode -> EVA, else the
+        dequant baseline — the historical linear() fallback)."""
+        if self.vq_mode != "none":
+            return self
+        return dataclasses.replace(
+            self, vq_mode="eva" if mode == "decode" else "dequant")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Analytic estimates for introspection and benchmark reporting.
+
+    ``macs``         : multiply-accumulates on the GEMM/MXU path.
+    ``lookup_adds``  : add-only lookup/reconstruction work (the paper's
+                       epilogue adds; 0 for dense/int8).
+    ``weight_bytes`` : per-call weight-side HBM traffic (compressed for
+                       VQ kinds)."""
+
+    macs: int
+    lookup_adds: int
+    weight_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPlan:
+    """A frozen, executable matmul choice.
+
+    ``config`` holds every resolved number the backend needs (epilogue
+    kind, block_v, kernel tiles, ...) — ``execute`` re-derives nothing.
+    """
+
+    backend: str
+    spec: LinearSpec
+    policy: PlanPolicy
+    config: Tuple[Tuple[str, Any], ...]
+    cost: PlanCost
+    run: Callable[[Any, Any], Any]
+
+    def execute(self, x, leaf):
+        """Run the planned matmul. ``leaf`` is the weight leaf the spec
+        was derived from (a VQWeight or a dense array)."""
+        return self.run(x, leaf)
+
+    @property
+    def config_dict(self) -> Dict[str, Any]:
+        return dict(self.config)
+
+    def describe(self) -> str:
+        s = self.spec
+        parts = [self.backend, f"M={s.M}", f"K={s.K}", f"N={s.N}"]
+        if s.splits:
+            parts.append(f"splits={len(s.splits)}")
+        parts += [f"{k}={v}" for k, v in self.config]
+        if self.policy.interpret:
+            parts.append("interpret")
+        return " ".join(parts)
+
+
+def vq_weight_bytes(spec: LinearSpec) -> int:
+    """Compressed per-call weight traffic of a VQ leaf: uint8 (n<=8) or
+    int32 indices + codebooks + per-channel scales."""
+    idx = spec.C * spec.V * spec.N * (1 if spec.k <= 256 else 4)
+    return idx + spec.C * spec.d * spec.k * 4 + spec.N * 4
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Backend:
+    name: str
+    matcher: Callable[[LinearSpec, PlanPolicy], bool]
+    planner_fn: Callable[[LinearSpec, PlanPolicy], MatmulPlan]
+
+
+_REGISTRY: "collections.OrderedDict[str, _Backend]" = collections.OrderedDict()
+_REGISTRY_LOCK = threading.Lock()
+
+# kernel wrapper modules that register Pallas backends on import; loaded
+# lazily on the first plan() that can need them (impl="pallas", or a
+# no-match retry) so pure-jnp workloads never import pallas
+_KERNEL_BACKEND_MODULES = (
+    "repro.kernels.fused_vq_matmul.ops",
+    "repro.kernels.dequant_gemv.ops",
+    "repro.kernels.int8_gemm.ops",
+)
+_kernels_loaded = False
+
+
+def register_backend(name: str,
+                     matcher: Callable[[LinearSpec, PlanPolicy], bool],
+                     planner_fn: Callable[[LinearSpec, PlanPolicy], MatmulPlan],
+                     ) -> None:
+    """Register (or idempotently re-register) a matmul backend.
+
+    ``matcher(spec, policy)`` says whether this backend executes the
+    site; ``planner_fn(spec, policy)`` freezes every tile size / epilogue
+    choice into a MatmulPlan. Matchers are evaluated in registration
+    order; the first match wins."""
+    with _REGISTRY_LOCK:
+        _REGISTRY[name] = _Backend(name, matcher, planner_fn)
+
+
+def registered_backends() -> Tuple[str, ...]:
+    _ensure_kernel_backends()
+    return tuple(_REGISTRY)
+
+
+def _ensure_kernel_backends() -> None:
+    global _kernels_loaded
+    if _kernels_loaded:
+        return
+    for mod in _KERNEL_BACKEND_MODULES:
+        importlib.import_module(mod)
+    # only latch after every import succeeded — a transient failure must
+    # stay loud and retryable, not silently de-register the Pallas backends
+    _kernels_loaded = True
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+CacheInfo = collections.namedtuple("CacheInfo", "hits misses currsize maxsize")
+
+
+class Planner:
+    """LRU-cached (LinearSpec, PlanPolicy) -> MatmulPlan resolver.
+
+    Planning happens at Python/trace time only: a jitted decode step
+    consults the planner while tracing and bakes ``plan.run`` into the
+    program, so repeated executed steps never re-enter ``plan``."""
+
+    def __init__(self, maxsize: int = 1024):
+        self._cache: "collections.OrderedDict[Tuple[LinearSpec, PlanPolicy], MatmulPlan]" = (
+            collections.OrderedDict())
+        self._maxsize = maxsize
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+
+    def plan(self, spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+        key = (spec, policy)
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._hits += 1
+                self._cache.move_to_end(key)
+                return hit
+        # Load the Pallas kernel registrations only when they can be
+        # needed: pure-jnp workloads must not pay (or depend on) the
+        # pallas imports. A no-match retry covers custom late loads.
+        if policy.impl == "pallas":
+            _ensure_kernel_backends()
+        backend = self._match(spec, policy)
+        if backend is None and not _kernels_loaded:
+            _ensure_kernel_backends()
+            backend = self._match(spec, policy)
+        if backend is None:
+            raise ValueError(
+                f"no registered backend matches spec={spec} policy={policy}; "
+                f"registered: {tuple(_REGISTRY)}")
+        built = backend.planner_fn(spec, policy)
+        with self._lock:  # (re-planning a raced key is harmless)
+            self._misses += 1
+            self._cache[key] = built
+            while len(self._cache) > self._maxsize:
+                self._cache.popitem(last=False)
+        return built
+
+    @staticmethod
+    def _match(spec: LinearSpec, policy: PlanPolicy) -> Optional[_Backend]:
+        with _REGISTRY_LOCK:  # snapshot: register_backend may race
+            backends = tuple(_REGISTRY.values())
+        for be in backends:
+            if be.matcher(spec, policy):
+                return be
+        return None
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self._hits, self._misses, len(self._cache),
+                         self._maxsize)
+
+    def cache_clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self._hits = 0
+            self._misses = 0
+
+
+_PLANNER = Planner()
+
+
+def default_planner() -> Planner:
+    return _PLANNER
+
+
+def plan(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+    """Resolve (spec, policy) through the default planner's cache."""
+    return _PLANNER.plan(spec, policy)
+
+
+# ---------------------------------------------------------------------------
+# Spec derivation + model-layer entry points
+# ---------------------------------------------------------------------------
+
+
+def plan_node(p: Any, x, *, mode: str, policy: PlanPolicy,
+              out_dtype=None) -> MatmulPlan:
+    """Plan one linear param node ({"w": ...} or {"vq": ...}) for input
+    ``x`` under run ``mode``. This is the single dispatch point used by
+    ``models.common.linear`` — the weight-kind decision lives in the spec
+    derivation, the formulation choice in the backend registry."""
+    out_dtype = out_dtype or x.dtype
+    if "vq" in p:
+        vq: VQWeight = p["vq"]
+        spec = LinearSpec.for_vq(vq, M=x.size // vq.K, x_dtype=x.dtype,
+                                 out_dtype=out_dtype)
+        return _PLANNER.plan(spec, policy.resolve_vq_mode(mode))
+    w = p["w"]
+    kind = "int8" if (mode == "prefill" and policy.int8_prefill) else "dense"
+    spec = LinearSpec.for_dense(w, M=x.size // int(w.shape[-2]),
+                                x_dtype=x.dtype, out_dtype=out_dtype,
+                                kind=kind)
+    return _PLANNER.plan(spec, policy)
+
+
+def plan_vq(x, vq: VQWeight, policy: PlanPolicy, out_dtype=None) -> MatmulPlan:
+    """Plan a bare VQ matmul (the eva_matmul / vq_matmul wrapper path)."""
+    spec = LinearSpec.for_vq(vq, M=x.size // vq.K, x_dtype=x.dtype,
+                             out_dtype=out_dtype or x.dtype)
+    return _PLANNER.plan(spec, policy.resolve_vq_mode("decode"))
+
+
+def preplan_params(params: Any, policy: PlanPolicy, *, mode: str, m: int,
+                   act_dtype, planner: Optional[Planner] = None,
+                   ) -> List[Tuple[Tuple[str, ...], MatmulPlan]]:
+    """Walk a param tree and plan every linear leaf at batch size ``m``
+    (tokens in flight), warming the planner cache before the first trace
+    and returning (path, plan) pairs for logging/introspection.
+
+    Leaves executed at other M (e.g. MoE capacity buffers under vmap)
+    simply plan again on first trace — pre-planning is a warm-up plus a
+    report, never a constraint."""
+    planner = planner or _PLANNER
+    out: List[Tuple[Tuple[str, ...], MatmulPlan]] = []
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return
+        if "vq" in node:
+            vq: VQWeight = node["vq"]
+            spec = LinearSpec.for_vq(vq, M=m, x_dtype=act_dtype,
+                                     out_dtype=act_dtype, in_mesh=False)
+            out.append((path, planner.plan(spec, policy.resolve_vq_mode(mode))))
+            return
+        if "w" in node and hasattr(node["w"], "ndim") and node["w"].ndim >= 2:
+            kind = "int8" if (mode == "prefill" and policy.int8_prefill) \
+                else "dense"
+            spec = LinearSpec.for_dense(node["w"], M=m, x_dtype=act_dtype,
+                                        out_dtype=act_dtype, kind=kind,
+                                        in_mesh=False)
+            out.append((path, planner.plan(spec, policy)))
+            return
+        for key, sub in node.items():
+            walk(sub, path + (key,))
+
+    walk(params, ())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jnp backend registrations (fp / int8 / dequant / EVA epilogues)
+#
+# The Pallas counterparts register from kernels/*/ops.py, each owning its
+# tile model; these jnp formulations own the epilogue cost models in
+# core/ops.py (select_epilogue + the block sizing helpers), which are
+# called from HERE only — model layers never re-derive a formulation.
+# ---------------------------------------------------------------------------
+
+
+def _plan_fp(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+    out_dt = jnp.dtype(spec.out_dtype)
+    itemsize = jnp.dtype(spec.x_dtype).itemsize
+
+    def run(x, w):
+        if w.dtype != x.dtype:
+            w = w.astype(x.dtype)
+        return ops.fp_matmul(x, w, out_dtype=out_dt)
+
+    cost = PlanCost(macs=spec.M * spec.K * spec.N, lookup_adds=0,
+                    weight_bytes=spec.K * spec.N * itemsize)
+    return MatmulPlan("fp", spec, policy, (), cost, run)
+
+
+def _plan_int8_jnp(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+    out_dt = jnp.dtype(spec.out_dtype)
+
+    def run(x, w):
+        return ops.int8_matmul(x, w, out_dtype=out_dt)
+
+    cost = PlanCost(macs=spec.M * spec.K * spec.N, lookup_adds=0,
+                    weight_bytes=spec.K * spec.N)
+    return MatmulPlan("int8_jnp", spec, policy, (), cost, run)
+
+
+def _plan_dequant_jnp(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+    out_dt = jnp.dtype(spec.out_dtype)
+
+    def run(x, vq):
+        return ops.dequant_matmul(x, vq, out_dtype=out_dt)
+
+    cost = PlanCost(macs=spec.M * spec.K * spec.N,
+                    lookup_adds=spec.C * spec.V * spec.N * spec.d,
+                    weight_bytes=vq_weight_bytes(spec))
+    return MatmulPlan("dequant_jnp", spec, policy, (), cost, run)
+
+
+def _is_eva_jnp(spec: LinearSpec, policy: PlanPolicy) -> bool:
+    return (spec.kind == "vq" and policy.impl == "jnp"
+            and policy.vq_mode in ("eva", "none"))
+
+
+def _resolve_eva_epilogue(spec: LinearSpec, policy: PlanPolicy
+                          ) -> Tuple[str, Optional[int]]:
+    """Freeze (epilogue kind, block_v) for the jnp EVA backends. The only
+    call site of core/ops.select_epilogue and the auto block sizers."""
+    epi = policy.epilogue
+    if epi == "auto":
+        return ops.select_epilogue(spec.M, spec.V, spec.N, spec.C, spec.k,
+                                   spec.d, distributed=spec.in_mesh)
+    if epi == "blocked":
+        if policy.block_v is not None:
+            return "blocked", min(policy.block_v, spec.V)
+        return "blocked", ops.auto_block_v(spec.M, spec.V, spec.N, spec.C,
+                                           spec.k)
+    if epi == "recon":
+        if policy.block_v is not None:
+            return "recon", min(policy.block_v, spec.V)
+        return "recon", ops.auto_recon_block_v(spec.V, spec.N, spec.d)
+    return epi, None
+
+
+def _eva_jnp_cost(spec: LinearSpec, kind: str) -> PlanCost:
+    if kind == "recon":
+        # slab-tiled reconstruct-and-GEMM: dequant's algebra, cache-tiled
+        return PlanCost(macs=spec.M * spec.K * spec.N,
+                        lookup_adds=spec.C * spec.V * spec.N * spec.d,
+                        weight_bytes=vq_weight_bytes(spec))
+    return PlanCost(
+        macs=ops.vq_gemm_macs(spec.M, spec.K, _log2(spec.k), spec.C, spec.d),
+        lookup_adds=ops.epilogue_adds(spec.M, spec.K, spec.N, spec.C, spec.d),
+        weight_bytes=vq_weight_bytes(spec),
+    )
+
+
+def _log2(k: int) -> int:
+    return max(int(k).bit_length() - 1, 0)
+
+
+def _make_eva_jnp_planner(kind: str):
+    def planner_fn(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+        resolved, bv = _resolve_eva_epilogue(spec, policy)
+        assert resolved == kind, (resolved, kind)
+        out_dt = jnp.dtype(spec.out_dtype)
+
+        def run(x, vq):
+            return ops.eva_epilogue_exec(x, vq, kind=kind, block_v=bv,
+                                         out_dtype=out_dt)
+
+        config = (("epilogue", kind),) + \
+            ((("bv", bv),) if bv is not None else ())
+        return MatmulPlan(f"eva_{kind}", spec, policy, config,
+                          _eva_jnp_cost(spec, kind), run)
+
+    return planner_fn
+
+
+def _register_jnp_backends() -> None:
+    register_backend(
+        "fp",
+        lambda s, p: s.kind == "dense",
+        _plan_fp,
+    )
+    register_backend(
+        "int8_jnp",
+        lambda s, p: s.kind == "int8" and p.impl == "jnp",
+        _plan_int8_jnp,
+    )
+    register_backend(
+        "dequant_jnp",
+        lambda s, p: s.kind == "vq" and p.vq_mode == "dequant"
+        and p.impl == "jnp",
+        _plan_dequant_jnp,
+    )
+    for kind in EPILOGUES:
+        register_backend(
+            f"eva_{kind}",
+            lambda s, p, _kind=kind: _is_eva_jnp(s, p)
+            and _resolve_eva_epilogue(s, p)[0] == _kind,
+            _make_eva_jnp_planner(kind),
+        )
+
+
+_register_jnp_backends()

@@ -18,6 +18,14 @@ output-codebook computation g-fold. Cross-attention blocks (whisper
 "cross_attn", vision "xattn") are excluded — their q projection consumes
 a different input than k/v.
 
+Shard-aware grouping: pass the target ``mesh`` (or a model-axis shard
+count) and a family whose member boundaries do NOT land on shard
+boundaries of the wide N axis is left UNGROUPED — the members keep clean
+column sharding instead of the grouped leaf silently falling back to
+V-sharding with a per-layer psum (the splits_shard_aligned rule shared
+with runtime/sharding.py). Every grouping decision can be captured in a
+``report`` list for inspection.
+
 Three methods:
   fit        — k-means additive VQ on real weights (small/smoke models)
   synthetic  — random valid indices/codebooks (benchmarks, huge dry-runs)
@@ -25,13 +33,14 @@ Three methods:
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Any, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.vq import VQWeight, fit_vq, synthetic_vq, vq_specs
+from repro.core.vq import (VQWeight, fit_vq, splits_shard_aligned,
+                           synthetic_vq, vq_specs)
 
 if TYPE_CHECKING:  # only for annotations — avoids a core<->models cycle
     from repro.models.common import ModelConfig
@@ -149,11 +158,26 @@ def _concat_cols(leaves):
     return jnp.concatenate(leaves, axis=-1)
 
 
+def _model_shards(mesh) -> int:
+    """Number of ways the 'model' mesh axis splits N. Accepts a Mesh /
+    AbstractMesh (anything with .shape and .axis_names) or a bare int
+    shard count; None -> 1 (shard-agnostic grouping)."""
+    if mesh is None:
+        return 1
+    if isinstance(mesh, int):
+        return max(mesh, 1)
+    if "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    return int(mesh.shape["model"])
+
+
 def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
                     key: Optional[jax.Array] = None,
                     serving_bf16: bool = True,
                     quantize_lm_head: bool = False,
-                    group_projections: bool = True) -> Any:
+                    group_projections: bool = True,
+                    mesh: Union[None, int, Any] = None,
+                    report: Optional[List[Dict[str, Any]]] = None) -> Any:
     """Walk the param tree and replace eligible {"w": ...} linears with
     {"vq": VQWeight} (preserving biases). Remaining large dense leaves
     (embeddings, lm_head) are cast to bf16 when `serving_bf16`.
@@ -163,9 +187,18 @@ def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
     `group_projections` fuses same-input families (attention and mLSTM
     wq/wk/wv -> "wqkv", MLA wq/wkv_a -> "wq_kva", gate/up -> "gu") into
     single wide VQWeights with recorded splits — the decode path then
-    runs one EVA matmul per family."""
+    runs one EVA matmul per family.
+
+    `mesh` (a Mesh/AbstractMesh or an int model-axis shard count) makes
+    grouping SHARD-AWARE: families whose member boundaries don't land on
+    shard boundaries of the wide N axis stay ungrouped, so their members
+    keep clean column sharding (instead of the grouped leaf falling back
+    to per-layer-psum V-sharding). `report`, when given, is appended one
+    dict per family decision: {"path", "family", "members", "splits",
+    "grouped", "reason"}."""
     key = key if key is not None else jax.random.PRNGKey(0)
     extra = ("lm_head",) if quantize_lm_head else ()
+    shards = _model_shards(mesh)
 
     def eligible(path, w):
         if extra and any(seg in path for seg in extra):
@@ -199,6 +232,26 @@ def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
             if not groupable(out, path, members, sibling):
                 continue
             splits = tuple(int(out[m]["w"].shape[-1]) for m in members)
+            if not splits_shard_aligned(splits, sum(splits), shards):
+                # shard-aware grouping: a misaligned family would lose
+                # clean column sharding (V-sharding fallback, per-layer
+                # psum) — keep the members separate on this mesh
+                if report is not None:
+                    report.append({
+                        "path": "/".join(path), "family": gkey,
+                        "members": members, "splits": splits,
+                        "grouped": False,
+                        "reason": f"member boundaries not aligned to "
+                                  f"{shards} model-axis shards "
+                                  f"(N={sum(splits)})",
+                    })
+                continue
+            if report is not None:
+                report.append({
+                    "path": "/".join(path), "family": gkey,
+                    "members": members, "splits": splits, "grouped": True,
+                    "reason": "aligned" if shards > 1 else "unsharded",
+                })
             wcat = _concat_cols([out[m]["w"] for m in members])
             grouped = {"vq": _quantize_leaf(wcat, cfg, method, key,
                                             splits=splits)}

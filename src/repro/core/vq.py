@@ -285,6 +285,30 @@ def vq_specs(K: int, N: int, *, d: int = 8, n: int = 8, C: int = 2,
     )
 
 
+def splits_shard_aligned(splits: Tuple[int, ...], N: int, shards: int) -> bool:
+    """True when every member boundary of a grouped projection family
+    (column-concatenated widths ``splits`` summing to ``N``) falls on a
+    shard boundary of the N axis split ``shards``-ways.
+
+    Shared by the sharding rules (runtime/sharding.py: misaligned grouped
+    leaves fall back to V-sharding) and by the quantization pass's
+    shard-aware grouping (core/quantize.py: skip grouping such families
+    so the members keep clean column sharding)."""
+    if shards <= 1:
+        return True
+    if N % shards:
+        return False
+    if not splits:
+        return True
+    shard = N // shards
+    off = 0
+    for width in splits[:-1]:
+        off += width
+        if off % shard:
+            return False
+    return True
+
+
 def split_grouped(vq: VQWeight) -> Tuple[VQWeight, ...]:
     """Slice a grouped VQWeight back into its per-projection members
     (shared codebooks; per-member index columns and scales)."""

@@ -1,18 +1,25 @@
-"""Jit'd wrapper for the dequant-GEMV baseline kernel."""
+"""Jit'd wrapper for the dequant-GEMV baseline kernel + its plan backend.
+
+Registers "dequant_pallas" with core/plan.py — before the plan API,
+``vq_matmul(mode="dequant")`` silently dropped ``impl``/``interpret`` and
+this kernel was unreachable from the model layers; a
+``PlanPolicy(vq_mode="dequant", impl="pallas")`` now routes here."""
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ops as core_ops
+from repro.core import plan as plan_mod
 from repro.core.vq import VQWeight
 from repro.kernels.dequant_gemv.kernel import dequant_gemv_pallas
 from repro.kernels.dequant_gemv.ref import dequant_gemv_ref
 
 
-def _auto_tiles(M: int, V: int, N: int, d: int):
+def _auto_tiles(M: int, V: int, N: int, d: int) -> Tuple[int, int]:
     """This kernel's VMEM footprint per grid step is the reconstructed
     weight slab (bv, bn, d) fp32 plus the (M, bv, d) x tile — no OC
     scratch — so it gets its own model rather than the fused kernel's:
@@ -70,3 +77,39 @@ def dequant_gemv(
     if pad_n:
         y = y[:, :N]
     return y.reshape(*lead, N).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plan backend
+# ---------------------------------------------------------------------------
+
+
+def _match_dequant_pallas(spec: plan_mod.LinearSpec,
+                          policy: plan_mod.PlanPolicy) -> bool:
+    return (spec.kind == "vq" and policy.vq_mode == "dequant"
+            and policy.impl == "pallas")
+
+
+def _plan_dequant_pallas(spec: plan_mod.LinearSpec,
+                         policy: plan_mod.PlanPolicy) -> plan_mod.MatmulPlan:
+    auto_bv, auto_bn = _auto_tiles(spec.M, spec.V, spec.N, spec.d)
+    bv = auto_bv if policy.block_v is None else min(policy.block_v, spec.V)
+    bn = auto_bn
+    out_dt = jnp.dtype(spec.out_dtype)
+    interpret = policy.interpret
+
+    def run(x, vq):
+        return dequant_gemv(x, vq, block_v=bv, block_n=bn,
+                            interpret=interpret, out_dtype=out_dt)
+
+    cost = plan_mod.PlanCost(
+        macs=spec.M * spec.K * spec.N,
+        lookup_adds=spec.C * spec.V * spec.N * spec.d,
+        weight_bytes=plan_mod.vq_weight_bytes(spec),
+    )
+    return plan_mod.MatmulPlan("dequant_pallas", spec, policy,
+                               (("bv", bv), ("bn", bn)), cost, run)
+
+
+plan_mod.register_backend("dequant_pallas", _match_dequant_pallas,
+                          _plan_dequant_pallas)

@@ -1,4 +1,4 @@
-"""Jit'd wrapper for the fused EVA matmul kernel.
+"""Jit'd wrapper for the fused EVA matmul kernel + its plan backend.
 
 Accepts a VQWeight and activations of any leading shape; handles padding,
 M-tiling (to bound the VMEM OC scratch), and dtype conversion.
@@ -9,22 +9,74 @@ stays at q bits/weight (see kernel.py's uint8 streaming contract). A
 grouped projection family (VQWeight.splits non-empty) is just a wider N
 here: one call, one OC scratch fill, every member's output columns swept
 against the same VMEM-resident OC.
+
+This module OWNS the fused kernel's tile model (`select_fused_tiles` /
+`fused_m_tile`, sized against the shared VMEM budgets in core/ops.py)
+and registers the "eva_fused_pallas" backend with core/plan.py: the
+planner freezes (m_tile, block_v, block_n) once per (spec, policy) and
+execution re-derives nothing.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ops as core_ops
+from repro.core import plan as plan_mod
 from repro.core.vq import VQWeight
 from repro.kernels.fused_vq_matmul.kernel import fused_vq_matmul_pallas
 from repro.kernels.fused_vq_matmul.ref import fused_vq_matmul_ref
 
 
+def fused_m_tile(C: int, v_padded: int, k: int) -> int:
+    """Largest m_tile whose VMEM OC scratch (C, m_tile, v_padded, k) fp32
+    stays under FUSED_OC_SCRATCH_BYTES. The single source of truth for
+    the fused wrapper's M-tiling (it passes the ACTUAL padded V)."""
+    return max(1, core_ops.FUSED_OC_SCRATCH_BYTES // max(C * v_padded * k * 4, 1))
+
+
+def select_fused_tiles(M: int, V: int, N: int, C: int, k: int = 256
+                       ) -> Tuple[int, int, int]:
+    """(m_tile, block_v, block_n) for the fused Pallas wrapper.
+
+    m_tile caps the VMEM OC scratch (C * m_tile * V_pad * k fp32) at
+    FUSED_OC_SCRATCH_BYTES (via fused_m_tile); block_v/block_n bound the
+    gathered epilogue tile (C, m_tile, block_v, block_n) fp32 at
+    FUSED_GATHER_TILE_BYTES, shrinking block_v first (the paper's v=32
+    tile height is the upper bound), then block_n (512-lane default)."""
+    bn = min(512, N)
+    bv = min(core_ops.DEFAULT_BLOCK_V, V)
+    m_tile = min(fused_m_tile(C, V + ((-V) % bv), k), M)
+
+    def tile_bytes(bv_, bn_):
+        return 4 * C * m_tile * bv_ * bn_
+
+    while bv > core_ops._MIN_BLOCK_V and \
+            tile_bytes(bv, bn) > core_ops.FUSED_GATHER_TILE_BYTES:
+        bv //= 2
+    while bn > 128 and tile_bytes(bv, bn) > core_ops.FUSED_GATHER_TILE_BYTES:
+        bn //= 2
+    return m_tile, bv, min(bn, N)
+
+
+def _resolve_m_tile(V: int, C: int, k: int, bv: int, bn: int) -> int:
+    """M-tile for realized tiles (bv, bn): cap the OC scratch at the
+    ACTUAL padded V, then shrink until the gathered tile (C, mt, bv, bn)
+    honors the budget (an explicit block_v may pad more than the auto
+    sizing assumed)."""
+    v_padded = V + ((-V) % bv)
+    mt = fused_m_tile(C, v_padded, k)
+    while mt > 1 and 4 * C * mt * bv * bn > core_ops.FUSED_GATHER_TILE_BYTES:
+        mt = max(1, mt // 2)
+    return mt
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_v", "block_n", "interpret", "use_pallas", "out_dtype")
+    jax.jit, static_argnames=("block_v", "block_n", "m_tile", "interpret",
+                              "use_pallas", "out_dtype")
 )
 def fused_vq_matmul(
     x: jax.Array,
@@ -32,15 +84,17 @@ def fused_vq_matmul(
     *,
     block_v="auto",
     block_n="auto",
+    m_tile="auto",
     interpret: bool = False,
     use_pallas: bool = True,
     out_dtype=None,
 ) -> jax.Array:
-    """block_v/block_n default to "auto": core_ops.select_fused_tiles sizes
+    """block_v/block_n/m_tile default to "auto": select_fused_tiles sizes
     the v/n tiles AND the m-tiling jointly from the VMEM footprint model
     (OC scratch C*m_tile*V_pad*2^n fp32 capped at FUSED_OC_SCRATCH_BYTES,
     gathered tile capped at FUSED_GATHER_TILE_BYTES). Explicit ints pin
-    the tile sizes (tests / TPU tuning)."""
+    the tile sizes (plans pass fully-resolved tiles; tests / TPU tuning
+    may too)."""
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     K, N, V, d, C = vq.K, vq.N, vq.V, vq.d, vq.C
@@ -56,7 +110,7 @@ def fused_vq_matmul(
         y = fused_vq_matmul_ref(X, vq.codebooks, I, scale)
         return y.reshape(*lead, N).astype(out_dtype)
 
-    _, auto_bv, auto_bn = core_ops.select_fused_tiles(M, V, N, C, k)
+    _, auto_bv, auto_bn = select_fused_tiles(M, V, N, C, k)
     bv = auto_bv if block_v == "auto" else min(block_v, V)
     bn = auto_bn if block_n == "auto" else min(block_n, N)
     pad_v = (-V) % bv
@@ -71,14 +125,8 @@ def fused_vq_matmul(
 
     # M-tiling bounds the OC scratch at C*mt*V_padded*k*4 bytes per call;
     # this Python loop is unrolled under jit (one pallas_call per M-tile).
-    # Recomputed from the ACTUAL padded V (an explicit block_v may pad
-    # more than the auto sizing assumed), then capped so the realized
-    # gathered tile (C, mt, bv, bn) also honors the budget — the actual
-    # padded V can be smaller than select_fused_tiles assumed, which
-    # would otherwise inflate mt past the tile the budget was checked at.
-    mt = core_ops.fused_m_tile(C, X.shape[1], k)
-    while mt > 1 and 4 * C * mt * bv * bn > core_ops.FUSED_GATHER_TILE_BYTES:
-        mt = max(1, mt // 2)
+    mt = _resolve_m_tile(V, C, k, bv, bn) if m_tile == "auto" \
+        else max(1, m_tile)
     cb = vq.codebooks.astype(jnp.float32)
     outs = [
         fused_vq_matmul_pallas(
@@ -91,3 +139,53 @@ def fused_vq_matmul(
     if pad_n:
         y = y[:, :N]
     return y.reshape(*lead, N).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plan backend: the fused kernel is THE impl="pallas" execution of an EVA
+# matmul — jnp epilogue requests are invalid there (loud, from the
+# registration, exactly like the old wrapper-level error).
+# ---------------------------------------------------------------------------
+
+
+def _match_eva_fused(spec: plan_mod.LinearSpec, policy: plan_mod.PlanPolicy
+                     ) -> bool:
+    return (spec.kind == "vq" and policy.impl == "pallas"
+            and policy.vq_mode in ("eva", "none"))
+
+
+def _plan_eva_fused(spec: plan_mod.LinearSpec, policy: plan_mod.PlanPolicy
+                    ) -> plan_mod.MatmulPlan:
+    if policy.epilogue != "auto":
+        raise ValueError(
+            "impl='pallas' always runs the fused tiled kernel; epilogue="
+            f"{policy.epilogue!r} does not apply (pass block_v to size its "
+            "v-tiles)")
+    _, auto_bv, auto_bn = select_fused_tiles(spec.M, spec.V, spec.N, spec.C,
+                                             spec.k)
+    bv = auto_bv if policy.block_v is None else min(policy.block_v, spec.V)
+    bn = auto_bn
+    # clamp once: the recorded config IS the static m_tile baked into run
+    mt = min(_resolve_m_tile(spec.V, spec.C, spec.k, bv, bn), spec.M)
+    out_dt = jnp.dtype(spec.out_dtype)
+    interpret = policy.interpret
+
+    def run(x, vq):
+        return fused_vq_matmul(x, vq, block_v=bv, block_n=bn, m_tile=mt,
+                               interpret=interpret, out_dtype=out_dt)
+
+    cost = plan_mod.PlanCost(
+        macs=core_ops.vq_gemm_macs(spec.M, spec.K,
+                                   max(spec.k.bit_length() - 1, 0),
+                                   spec.C, spec.d),
+        lookup_adds=core_ops.epilogue_adds(spec.M, spec.K, spec.N, spec.C,
+                                           spec.d),
+        weight_bytes=plan_mod.vq_weight_bytes(spec),
+    )
+    return plan_mod.MatmulPlan(
+        "eva_fused_pallas", spec, policy,
+        (("mt", mt), ("bv", bv), ("bn", bn)), cost, run)
+
+
+plan_mod.register_backend("eva_fused_pallas", _match_eva_fused,
+                          _plan_eva_fused)

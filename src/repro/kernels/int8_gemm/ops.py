@@ -1,4 +1,8 @@
-"""Jit'd wrapper: quantize activations/weights and run the int8 GEMM."""
+"""Jit'd wrapper: quantize activations/weights and run the int8 GEMM.
+
+Registers the "int8_pallas" backend with core/plan.py (the INT8 prefill
+path of a dense weight under PlanPolicy(int8_prefill=True, impl="pallas"));
+the planner freezes the (block_m, block_n, block_k) tiles per spec."""
 from __future__ import annotations
 
 import functools
@@ -6,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_mod
 from repro.core.ops import quantize_int8
 from repro.kernels.int8_gemm.kernel import int8_gemm_pallas
 from repro.kernels.int8_gemm.ref import int8_gemm_ref
@@ -51,3 +56,35 @@ def int8_matmul_kernel(
     y = int8_gemm_pallas(xq, wq, xs, ws, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     y = y[:M, :N]
     return y.reshape(*lead, N).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plan backend
+# ---------------------------------------------------------------------------
+
+
+def _plan_int8_pallas(spec: plan_mod.LinearSpec,
+                      policy: plan_mod.PlanPolicy) -> plan_mod.MatmulPlan:
+    # this kernel's tile model: MXU-friendly 256x256x512 defaults clamped
+    # to the actual GEMM extents (the wrapper pads the remainders)
+    bm = min(256, max(8, spec.M))
+    bn = min(256, spec.N)
+    bk = min(512, spec.K)
+    out_dt = jnp.dtype(spec.out_dtype)
+    interpret = policy.interpret
+
+    def run(x, w):
+        return int8_matmul_kernel(x, w, block_m=bm, block_n=bn, block_k=bk,
+                                  interpret=interpret, out_dtype=out_dt)
+
+    cost = plan_mod.PlanCost(macs=spec.M * spec.K * spec.N, lookup_adds=0,
+                             weight_bytes=spec.K * spec.N)
+    return plan_mod.MatmulPlan("int8_pallas", spec, policy,
+                               (("bm", bm), ("bn", bn), ("bk", bk)), cost, run)
+
+
+plan_mod.register_backend(
+    "int8_pallas",
+    lambda s, p: s.kind == "int8" and p.impl == "pallas",
+    _plan_int8_pallas,
+)

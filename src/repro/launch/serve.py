@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.plan import PlanPolicy
 from repro.models.api import build_model
 from repro.models.common import RunConfig
 from repro.serve import Engine, EngineConfig
@@ -30,8 +31,9 @@ def serve(arch: str = "llama2-7b", *, smoke: bool = True, requests: int = 8,
     params = model.init(key)
     if quantize:
         params = model.quantize(params, method="synthetic", key=key)
-    rc = RunConfig(mode="decode", vq_mode=vq_mode if quantize else "none",
-                   impl=impl, remat=False, attn_chunk=64)
+    rc = RunConfig(mode="decode", remat=False, attn_chunk=64,
+                   plan_policy=PlanPolicy(
+                       vq_mode=vq_mode if quantize else "none", impl=impl))
     ecfg = EngineConfig(num_slots=num_slots,
                         max_len=prompt_len + max_new + 8)
     extras = {}

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.plan import PlanPolicy
 from repro.models.api import Model
 from repro.models.common import RunConfig
 from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
@@ -121,7 +122,8 @@ def make_prefill_step(model: Model, rc: RunConfig):
 def lower_prefill_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
                        rc: Optional[RunConfig] = None, *,
                        quantized: bool = True):
-    rc = rc or RunConfig(mode="prefill", remat=False, int8_prefill=True)
+    rc = rc or RunConfig(mode="prefill", remat=False,
+                         plan_policy=PlanPolicy(int8_prefill=True))
     param_specs = model.param_specs(quantized=quantized)
     step = make_prefill_step(model, rc)
     pspec = shd.param_pspecs(param_specs, mesh)
@@ -149,7 +151,8 @@ def lower_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
                       quantized: bool = True, vq_mode: str = "eva",
                       quantize_lm_head: bool = False):
     """specs: {"tokens", "positions", "caches"} from model.input_specs."""
-    rc = rc or RunConfig(mode="decode", remat=False, vq_mode=vq_mode)
+    rc = rc or RunConfig(mode="decode", remat=False,
+                         plan_policy=PlanPolicy(vq_mode=vq_mode))
     rc = rc.replace(vq_mode=vq_mode if quantized else "none")
     param_specs = model.param_specs(quantized=quantized,
                                     quantize_lm_head=quantize_lm_head)

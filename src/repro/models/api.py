@@ -57,9 +57,14 @@ class Model:
         return self.module.init_params(key, self.cfg)
 
     def quantize(self, params, *, method: str = "fit", key=None,
-                 quantize_lm_head: bool = False) -> Any:
+                 quantize_lm_head: bool = False, mesh=None,
+                 report=None) -> Any:
+        """`mesh` enables shard-aware grouping (families whose member
+        boundaries are not shard-aligned under the target mesh stay
+        ungrouped); `report` (a list) captures every grouping decision."""
         return quantize_params(params, self.cfg, method=method, key=key,
-                               quantize_lm_head=quantize_lm_head)
+                               quantize_lm_head=quantize_lm_head,
+                               mesh=mesh, report=report)
 
     # --------------------------------------------------------------- forward
     def _extra_kwargs(self, batch: Dict[str, Any]) -> Dict[str, Any]:

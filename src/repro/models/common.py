@@ -9,7 +9,6 @@ stacked leading layer axis with jax.lax.scan.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -19,6 +18,8 @@ import numpy as np
 
 from repro.core.vq import VQWeight
 from repro.core import ops as core_ops
+from repro.core import plan as plan_mod
+from repro.core.plan import PlanPolicy
 
 Params = Any
 PyTree = Any
@@ -98,25 +99,52 @@ class ModelConfig:
         return ((self.vocab_size + 127) // 128) * 128
 
 
+# legacy RunConfig knobs that now live inside PlanPolicy; kept one
+# deprecation cycle as shims that (re)build the policy
+_POLICY_SHIM_FIELDS = ("vq_mode", "impl", "int8_prefill", "interpret",
+                       "epilogue", "epilogue_block_v")
+_POLICY_SHIM_DEFAULTS = {"vq_mode": "none", "impl": "jnp",
+                         "int8_prefill": False, "interpret": False,
+                         "epilogue": "auto", "epilogue_block_v": None}
+
+
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
-    """Static execution-mode knobs threaded through every block."""
+    """Static execution-mode knobs threaded through every block.
+
+    How a matmul executes is a single typed field now: ``plan_policy``
+    (core/plan.py PlanPolicy) — vq_mode, impl, epilogue + block_v,
+    int8_prefill and interpret in one frozen, validated object. Every
+    linear layer derives a LinearSpec from its (input, weight) and
+    fetches a MatmulPlan from the LRU-cached Planner under this policy;
+    the plan carries the chosen backend and all resolved numbers
+    (epilogue kind, v-blocks, kernel tiles), so nothing is re-derived at
+    execute time. Contradictory policies raise ValueError at
+    construction, not at the first matmul.
+
+        RunConfig(mode="decode",
+                  plan_policy=PlanPolicy(vq_mode="eva", impl="pallas"))
+
+    DEPRECATED (one cycle): the flat knobs ``vq_mode``/``impl``/
+    ``int8_prefill``/``interpret``/``epilogue``/``epilogue_block_v``
+    still work — when ``plan_policy`` is not given they build one, and
+    ``replace()`` on any of them rebuilds it — but new code should pass
+    ``plan_policy``. The mirrors are kept in sync with the policy, so
+    reading ``rc.vq_mode`` etc. keeps working during the cycle.
+
+    Non-execution knobs (mode, attention chunking, remat, the §Perf
+    levers) stay flat fields.
+    """
     mode: str = "train"          # train | prefill | decode
-    vq_mode: str = "none"        # none | eva | dequant   (FC layers)
-    impl: str = "jnp"            # jnp | pallas
-    int8_prefill: bool = False   # paper's INT8 prefill path
+    plan_policy: Optional[PlanPolicy] = None  # execution policy (see above)
     attn_chunk: int = 1024       # kv/q chunk for blocked attention
     attn_skip_oob_chunks: bool = False  # hillclimb: skip fully-masked chunks
     remat: bool = True
+    # ---- DEPRECATED plan_policy shims (one cycle; see class docstring) ----
+    vq_mode: str = "none"        # none | eva | dequant   (FC layers)
+    impl: str = "jnp"            # jnp | pallas
+    int8_prefill: bool = False   # paper's INT8 prefill path
     interpret: bool = False      # pallas interpret mode (CPU validation)
-    # EVA epilogue policy (core/ops.py select_epilogue): "auto" picks per
-    # shape — direct gather at M < d (v-blocked gather once the (C,M,V,N)
-    # intermediate spills the cache budget), the v-blocked reconstruct-
-    # and-GEMM "recon" at M >= d (the batched-decode regime), and "flat"
-    # inside a mesh context. "direct"/"flat"/"blocked"/"recon" force a
-    # formulation. epilogue_block_v pins the v-block height and requires
-    # epilogue="blocked"/"recon" on the jnp impl (None -> auto-sized);
-    # under impl="pallas" it sizes the fused kernel's v-tiles instead.
     epilogue: str = "auto"
     epilogue_block_v: Optional[int] = None
     # ---- perf-iteration levers (EXPERIMENTS.md §Perf) ----
@@ -125,7 +153,46 @@ class RunConfig:
     kv_cache_int8: bool = False      # int8-quantized KV cache (GQA decode)
     kv_cache_int4: bool = False      # int4-quantized KV cache (more aggressive)
 
+    def __post_init__(self):
+        if self.plan_policy is None:
+            object.__setattr__(self, "plan_policy", PlanPolicy(
+                vq_mode=self.vq_mode, impl=self.impl,
+                epilogue=self.epilogue, block_v=self.epilogue_block_v,
+                int8_prefill=self.int8_prefill, interpret=self.interpret,
+            ))
+            return
+        # plan_policy given: reject conflicting explicit legacy knobs,
+        # then mirror the policy into them so direct reads stay coherent
+        pol = self.plan_policy
+        mirror = {"vq_mode": pol.vq_mode, "impl": pol.impl,
+                  "int8_prefill": pol.int8_prefill,
+                  "interpret": pol.interpret, "epilogue": pol.epilogue,
+                  "epilogue_block_v": pol.block_v}
+        for f in _POLICY_SHIM_FIELDS:
+            cur = getattr(self, f)
+            if cur != _POLICY_SHIM_DEFAULTS[f] and cur != mirror[f]:
+                raise ValueError(
+                    f"RunConfig({f}={cur!r}) conflicts with the explicit "
+                    f"plan_policy ({f.replace('epilogue_block_v', 'block_v')}"
+                    f"={mirror[f]!r}); pass execution knobs inside "
+                    "plan_policy only")
+            object.__setattr__(self, f, mirror[f])
+
+    @property
+    def policy(self) -> PlanPolicy:
+        """The resolved execution policy (never None after init)."""
+        return self.plan_policy
+
     def replace(self, **kw) -> "RunConfig":
+        """dataclasses.replace that keeps plan_policy and the deprecated
+        flat knobs coherent: replacing a legacy knob rebuilds the policy
+        from the (updated) flat fields; replacing the policy resets any
+        legacy mirror not explicitly passed alongside it."""
+        if kw.get("plan_policy") is not None:
+            for f in _POLICY_SHIM_FIELDS:
+                kw.setdefault(f, _POLICY_SHIM_DEFAULTS[f])
+        elif any(f in kw for f in _POLICY_SHIM_FIELDS):
+            kw["plan_policy"] = None
         return dataclasses.replace(self, **kw)
 
 
@@ -158,34 +225,16 @@ def linear(p: Params, x: jax.Array, rc: RunConfig, *, out_dtype=None) -> jax.Arr
       train           -> dense bf16/fp32 matmul
       prefill (+int8) -> int8 GEMM (paper's reconfigurable-PE INT8 mode)
       decode  (vq)    -> EVA VQ-GEMM + OC lookup (or dequant baseline)
-    """
-    out_dtype = out_dtype or x.dtype
-    if "vq" in p:
-        vq: VQWeight = p["vq"]
-        if rc.mode == "decode" or rc.vq_mode != "none":
-            mode = rc.vq_mode if rc.vq_mode != "none" else "eva"
-            # an epilogue/epilogue_block_v conflict raises loudly inside
-            # resolve_epilogue (jnp) — no pre-check duplicated here
-            y = core_ops.vq_matmul(
-                x, vq, mode=mode, out_dtype=out_dtype,
-                impl=rc.impl, interpret=rc.interpret,
-                epilogue=rc.epilogue,
-                block_v=(rc.epilogue_block_v if rc.epilogue_block_v
-                         is not None else "auto"),
-            )
-        else:  # pragma: no cover - vq params always run a vq mode
-            y = core_ops.dequant_matmul(x, vq, out_dtype=out_dtype)
-    else:
-        w = p["w"].astype(x.dtype) if p["w"].dtype != x.dtype else p["w"]
-        if rc.mode == "prefill" and rc.int8_prefill:
-            if rc.impl == "pallas":
-                from repro.kernels.int8_gemm import int8_matmul_kernel
 
-                y = int8_matmul_kernel(x, p["w"], interpret=rc.interpret, out_dtype=out_dtype)
-            else:
-                y = core_ops.int8_matmul(x, p["w"], out_dtype=out_dtype)
-        else:
-            y = core_ops.fp_matmul(x, w, out_dtype=out_dtype)
+    All formulation/impl/epilogue choice lives behind the plan API: the
+    (spec, policy) pair resolves through the LRU-cached Planner to a
+    MatmulPlan whose backend and tile numbers are frozen at plan time —
+    this function contains no epilogue or impl branching, and inside a
+    jitted step the planner is only consulted while tracing."""
+    out_dtype = out_dtype or x.dtype
+    pl = plan_mod.plan_node(p, x, mode=rc.mode, policy=rc.policy,
+                            out_dtype=out_dtype)
+    y = pl.execute(x, p["vq"] if "vq" in p else p["w"])
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -494,11 +543,11 @@ def attention_fwd(
                 cache["v"], slot, v.astype(cache["v"].dtype)
             )
             new_len = cache_len + 1
-            if rc.impl == "pallas" and window == 0:
+            if rc.policy.impl == "pallas" and window == 0:
                 from repro.kernels.flash_decode import flash_decode
 
                 o = flash_decode(q, k_cache, v_cache, new_len,
-                                 interpret=rc.interpret)
+                                 interpret=rc.policy.interpret)
             else:
                 o = decode_attention(
                     q, k_cache, v_cache, new_len, window=window,

@@ -27,7 +27,10 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.vq import VQWeight
+from repro.core.vq import VQWeight, splits_shard_aligned  # noqa: F401
+# (splits_shard_aligned is re-exported: the grouped-family alignment rule
+# lives with the grouped layout in core/vq.py and is shared with the
+# quantization pass's shard-aware grouping)
 
 # output projections back into the residual stream -> row-parallel
 _ROW_KEYS = {"wo", "down", "out"}
@@ -100,15 +103,7 @@ def _linear_specs(node: dict, key: str, mesh: Mesh, *, row: bool,
         # slices straddle devices and each decode layer pays a reshard.
         # Misaligned families prefer V (contraction) sharding instead.
         def n_split_aligned():
-            if not vq.splits or not div(N):
-                return div(N)
-            shard = N // mdim
-            off = 0
-            for width in vq.splits[:-1]:
-                off += width
-                if off % shard != 0:
-                    return False
-            return True
+            return div(N) and splits_shard_aligned(vq.splits, N, mdim)
 
         if shard_expert:
             lead = nd_idx - 3

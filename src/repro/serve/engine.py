@@ -14,16 +14,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_mod
 from repro.models.api import Model
 from repro.models.common import RunConfig
 from repro.serve.kvcache import pad_prefill_cache
 from repro.serve.scheduler import Request, Scheduler
+
+log = logging.getLogger(__name__)
 
 
 def _insert_slot(batched: Any, single: Any, b: int) -> Any:
@@ -60,6 +64,28 @@ class Engine:
         self.caches = model.init_cache(ecfg.num_slots, ecfg.max_len)
         self.positions = np.zeros((ecfg.num_slots,), np.int64)
         self.last_token = np.zeros((ecfg.num_slots,), np.int64)
+
+        # Plan once at slot capacity. The decode entries are exact: the
+        # batched step always runs at M = num_slots tokens in flight, so
+        # this warms the Planner cache before the first trace (the traced
+        # step then only hits it). The prefill entries are capacity-bound
+        # ESTIMATES at M = max_len — real prefills trace at the prompt
+        # length and plan on demand (regime choices like direct-vs-recon
+        # flip with M) — logged for introspection, labeled as such.
+        self.plans: Dict[str, Any] = {
+            "decode": plan_mod.preplan_params(
+                params, rc.policy, mode="decode", m=ecfg.num_slots,
+                act_dtype=cfg.act_dtype),
+            "prefill@cap": plan_mod.preplan_params(
+                params, rc.policy, mode="prefill", m=ecfg.max_len,
+                act_dtype=cfg.act_dtype),
+        }
+        for phase, plans in self.plans.items():
+            uniq: Dict[str, int] = {}
+            for _path, pl in plans:
+                uniq[pl.describe()] = uniq.get(pl.describe(), 0) + 1
+            for desc, count in sorted(uniq.items()):
+                log.info("%s plan [%d leaves] %s", phase, count, desc)
 
         self._decode_fn = jax.jit(
             functools.partial(self._decode_impl, rc=rc.replace(mode="decode")),

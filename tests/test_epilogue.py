@@ -59,9 +59,15 @@ class TestEquivalence:
     def test_legacy_argument_surface_still_works(self):
         x, vq = _mk(80, 70, (), 3)
         ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
-        for kw in (dict(block_v=None), dict(block_v=5),
-                   dict(flat_gather=True), dict()):
+        # still-supported legacy spellings (no warning)
+        for kw in (dict(block_v=5), dict()):
             got = ops.eva_matmul(x, vq, out_dtype=jnp.float32, **kw)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+        # removed spellings: one deprecation-warning cycle via the wrapper
+        for kw in (dict(block_v=None), dict(flat_gather=True)):
+            with pytest.deprecated_call():
+                got = ops.eva_matmul(x, vq, out_dtype=jnp.float32, **kw)
             np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                        rtol=2e-4, atol=2e-4)
 
@@ -145,24 +151,28 @@ class TestSelection:
     def test_auto_under_mesh_context_selects_flat(self):
         """Inside an active mesh context the auto resolution must pick the
         SPMD-friendly flat epilogue (the V-block scans would reshape a
-        sharded V axis into collectives)."""
+        sharded V axis into collectives). The mesh flag is captured into
+        the LinearSpec at derivation, so the cached plans differ."""
         from jax.sharding import Mesh
+        from repro.core import plan as plan_mod
 
-        args = dict(M=32, V=512, N=4096, C=2, k=256, d=8)
-        assert ops.resolve_epilogue("auto", "auto", False, **args)[0] == "recon"
+        x, vq = _mk(4096, 4096, (), 32)  # M=32 >= d -> recon off-mesh
+        auto = plan_mod.PlanPolicy(vq_mode="eva", epilogue="auto")
+        assert plan_mod.plan_vq(x, vq, auto).backend == "eva_recon"
         with Mesh(np.array(jax.devices()[:1]), ("model",)):
-            assert ops.resolve_epilogue("auto", "auto", False, **args) == \
-                ("flat", None)
-            assert ops.resolve_epilogue(None, "auto", False, **args) == \
-                ("flat", None)
+            assert plan_mod.plan_vq(x, vq, auto).backend == "eva_flat"
             # explicit requests still win over the mesh preference
-            assert ops.resolve_epilogue("recon", 64, False, **args) == \
-                ("recon", 64)
+            forced = plan_mod.PlanPolicy(vq_mode="eva", epilogue="recon",
+                                         block_v=64)
+            pl = plan_mod.plan_vq(x, vq, forced)
+            assert pl.backend == "eva_recon" and pl.config_dict["bv"] == 64
 
 
 class TestResolveErrors:
-    """Satellite: the epilogue arguments are one coherent parameter with
-    loud errors on conflicting combinations."""
+    """The epilogue arguments are one coherent policy with loud errors on
+    conflicting combinations — statically contradictory ones raise from
+    PlanPolicy at construction, legacy-surface conflicts from the
+    eva_matmul wrapper."""
 
     def _call(self, **kw):
         x, vq = _mk(80, 70, (), 2)
@@ -228,18 +238,40 @@ class TestResolveErrors:
 
 
 class TestFusedTiles:
-    """The fused Pallas wrapper's auto tile/m-tile sizing."""
+    """The fused Pallas wrapper's auto tile/m-tile sizing — the tile
+    model now lives with the kernel wrapper (kernels/fused_vq_matmul),
+    sized against the shared VMEM budgets in core/ops."""
 
     def test_oc_scratch_budget_respected(self):
-        mt, bv, bn = ops.select_fused_tiles(64, 512, 4096, 2, 256)
+        from repro.kernels.fused_vq_matmul.ops import select_fused_tiles
+
+        mt, bv, bn = select_fused_tiles(64, 512, 4096, 2, 256)
         v_pad = 512 + ((-512) % bv)
         assert 2 * mt * v_pad * 256 * 4 <= ops.FUSED_OC_SCRATCH_BYTES
         assert 2 * mt * bv * bn * 4 <= ops.FUSED_GATHER_TILE_BYTES
 
     def test_small_shapes_single_tile(self):
-        mt, bv, bn = ops.select_fused_tiles(1, 10, 70, 2, 256)
+        from repro.kernels.fused_vq_matmul.ops import select_fused_tiles
+
+        mt, bv, bn = select_fused_tiles(1, 10, 70, 2, 256)
         assert mt == 1 and bv == 10 and bn == 70
 
     def test_block_v_upper_bound_is_paper_tile(self):
-        _, bv, _ = ops.select_fused_tiles(1, 512, 4096, 2, 256)
+        from repro.kernels.fused_vq_matmul.ops import select_fused_tiles
+
+        _, bv, _ = select_fused_tiles(1, 512, 4096, 2, 256)
         assert bv <= ops.DEFAULT_BLOCK_V
+
+    def test_fused_plan_freezes_tiles(self):
+        """The eva_fused_pallas plan carries (mt, bv, bn) resolved once —
+        nothing re-derived at execute time."""
+        from repro.core import plan as plan_mod
+        from repro.kernels.fused_vq_matmul.ops import select_fused_tiles
+
+        x, vq = _mk(4096, 4096, (), 4)
+        pl = plan_mod.plan_vq(x, vq, plan_mod.PlanPolicy(
+            vq_mode="eva", impl="pallas", interpret=True))
+        cfgd = pl.config_dict
+        _, bv, bn = select_fused_tiles(4, vq.V, vq.N, vq.C, 256)
+        assert pl.backend == "eva_fused_pallas"
+        assert cfgd["bv"] == bv and cfgd["bn"] == bn and cfgd["mt"] >= 1
