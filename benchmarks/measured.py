@@ -6,6 +6,16 @@ complements the analytic accelerator model with real executions:
     as a real CPU speedup because the FLOPs genuinely shrink.
   * Pallas kernels in interpret mode at reduced shapes (correct-path
     timing only; interpret mode is not representative of TPU perf).
+
+Every row is CALIBRATION-READY: alongside the chosen ``plan=`` it emits
+the plan's cost-model terms (``backend=``/``macs=``/``lookup_adds=``/
+``weight_bytes=`` + ``intermediate_bytes=``/``launches=`` where they
+differ from the defaults) so `core/calibrate.py` can fit per-backend
+time constants from the committed BENCH_measured.json. Interpret-mode
+rows carry ``interpret=1`` and are excluded from fitting. Rows where the
+Planner ranked multiple eligible backends also report the predicted-time
+``ranking=`` and the ``first_match=`` backend the pre-ranking dispatch
+would have picked.
 """
 from __future__ import annotations
 
@@ -29,12 +39,36 @@ def _time(fn, *args, iters=5, warmup=2):
     return (time.perf_counter() - t0) / iters
 
 
-def _plan_desc(x, vq, **policy_kw) -> str:
-    """The plan the auto policy would choose for this call — the single
-    source of epilogue/backend naming in these rows (no re-implemented
-    selection logic here)."""
-    policy = plan_mod.PlanPolicy(vq_mode="eva", **policy_kw)
-    return plan_mod.plan_vq(x, vq, policy).describe()
+def _plan(x, vq, **policy_kw) -> plan_mod.MatmulPlan:
+    """The plan the policy resolves to for this call — the single source
+    of backend/epilogue naming AND cost fields in these rows (no
+    re-implemented selection logic here)."""
+    policy_kw.setdefault("vq_mode", "eva")
+    policy = plan_mod.PlanPolicy(**policy_kw)
+    return plan_mod.plan_vq(x, vq, policy)
+
+
+def plan_fields(pl: plan_mod.MatmulPlan) -> str:
+    """Calibration-ready derived fields for one planned execution."""
+    c = pl.cost
+    parts = [f"plan={pl.describe()}", f"backend={pl.backend}",
+             f"macs={c.macs}", f"lookup_adds={c.lookup_adds}",
+             f"weight_bytes={c.weight_bytes}"]
+    if c.intermediate_bytes:
+        parts.append(f"intermediate_bytes={c.intermediate_bytes}")
+    if c.launches != 1:
+        parts.append(f"launches={c.launches}")
+    if pl.policy.interpret:
+        parts.append("interpret=1")
+    if pl.predicted_us is not None:
+        parts.append(f"pred_us={pl.predicted_us:.1f}")
+        parts.append(f"cost_model={pl.provenance}")
+    rk = pl.describe_ranking()
+    if rk:
+        parts.append(f"ranking={rk}")
+        parts.append(
+            f"first_match={plan_mod.first_match_backend(pl.spec, pl.policy)}")
+    return ";".join(parts)
 
 
 def run(report):
@@ -53,7 +87,14 @@ def run(report):
         report(f"measured/eva_{K}x{N}", t_eva * 1e6,
                f"dense_us={t_dense*1e6:.0f};dequant_us={t_deq*1e6:.0f};"
                f"speedup_vs_dequant={t_deq/t_eva:.2f};"
-               f"plan={_plan_desc(x, vq)}")
+               f"{plan_fields(_plan(x, vq))}")
+        # baseline rows in their own right: calibration samples for the
+        # fp and dequant_jnp backends (the timings are already in hand)
+        pl_fp = plan_mod.plan_node({"w": w}, x, mode="decode",
+                                   policy=plan_mod.PlanPolicy())
+        report(f"measured/dense_{K}x{N}", t_dense * 1e6, plan_fields(pl_fp))
+        pl_dq = _plan(x, vq, vq_mode="dequant")
+        report(f"measured/dequant_{K}x{N}", t_deq * 1e6, plan_fields(pl_dq))
 
     # batched decode (continuous batching regime): the AUTO epilogue must
     # stay >= 1x vs dequant across the M sweep. At M>=8 the direct
@@ -71,7 +112,10 @@ def run(report):
         report(f"measured/batch{M}_{K}x{N}", t_eva * 1e6,
                f"dequant_us={t_deq*1e6:.0f};speedup={t_deq/t_eva:.2f};"
                f"direct_us={t_dir*1e6:.0f};"
-               f"plan={_plan_desc(x, vq)}")
+               f"{plan_fields(_plan(x, vq))}")
+        if M > 1:  # forced-direct rows calibrate eva_direct beyond M=1
+            report(f"measured/direct{M}_{K}x{N}", t_dir * 1e6,
+                   plan_fields(_plan(x, vq, epilogue="direct")))
 
     # grouped QKV decode: ONE wide VQ-GEMM + OC lookup over [Wq|Wk|Wv]
     # (shared codebook set, core/vq.py grouped layout) vs three separate
@@ -120,20 +164,33 @@ def run(report):
                    f"separate_us={min(t_s)*1e6:.0f};"
                    f"speedup_vs_separate={min(t_s)/min(t_g):.2f};"
                    f"grouped_collapse_ratio={collapse:.0f};"
-                   f"plan={_plan_desc(x, g)}")
+                   f"{plan_fields(_plan(x, g))}")
 
     # pallas kernels, interpret mode (validation-path timing): time the
     # PLANNED execution so the reported plan's tiles are exactly the
-    # configuration that was measured
+    # configuration that was measured. These rows carry interpret=1 and
+    # never feed calibration; the fused-vs-split decision they report is
+    # the Planner's predicted-time RANKING (vs the first_match= backend
+    # the old dispatch order would have picked).
     fused_policy = plan_mod.PlanPolicy(vq_mode="eva", impl="pallas",
                                        interpret=True)
     vq_s = synthetic_vq(key, 256, 512, d=8, n=8, C=2)
     x_s = jax.random.normal(key, (1, 256), jnp.float32)
     pl_s = plan_mod.plan_vq(x_s, vq_s, fused_policy)
     t_fused = _time(pl_s.execute, x_s, vq_s, iters=3)
-    report("measured/pallas_fused_interpret_256x512", t_fused * 1e6,
+    report("measured/pallas_ranked_interpret_256x512", t_fused * 1e6,
            "interpret-mode (CPU emulation, not TPU-representative);"
-           f"plan={pl_s.describe()}")
+           f"{plan_fields(pl_s)}")
+
+    # the two-kernel split candidate at the same shape (vq_gemm writes
+    # the OC buffer to HBM, oc_lookup gathers from it — no fusion)
+    from repro.kernels.oc_lookup.ops import _plan_eva_split
+
+    split_pl = _plan_eva_split(pl_s.spec, fused_policy)
+    t_split = _time(split_pl.execute, x_s, vq_s, iters=3)
+    report("measured/pallas_split_interpret_256x512", t_split * 1e6,
+           "interpret-mode; vq_gemm->HBM OC buffer->oc_lookup;"
+           f"{plan_fields(split_pl)}")
 
     # grouped family through the fused Pallas kernel (interpret): one call,
     # one OC scratch fill, the N sweep covers all three members
@@ -142,5 +199,5 @@ def run(report):
     t_gfused = _time(pl_g.execute, x_s, g_s, iters=3)
     report("measured/pallas_fused_grouped_interpret_256x384", t_gfused * 1e6,
            "interpret-mode; uint8 index tiles, grouped qkv sweep;"
-           f"plan={pl_g.describe()}")
+           f"{plan_fields(pl_g)}")
     return rows

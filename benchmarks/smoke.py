@@ -1,0 +1,46 @@
+"""Tiny-shape bench smoke for CI: real timed executions in seconds, not
+minutes, emitting the SAME calibration-ready row structure as the full
+`measured` module so `benchmarks/schema.py` can gate the JSON contract
+on every push (plan= + backend= + cost fields per row; interpret rows
+flagged; ranked rows reporting ranking= and first_match=).
+
+The numbers themselves are throwaway (tiny shapes, shared CI runners) —
+only the row SHAPE is load-bearing here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as core_ops
+from repro.core import plan as plan_mod
+from repro.core.vq import synthetic_vq
+from benchmarks.measured import _plan, _time, plan_fields
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    K, N = 128, 96
+    vq = synthetic_vq(key, K, N, d=8, n=8, C=2)
+
+    # jnp regimes: direct at M=1, recon at M>=d — same auto policy CI
+    # users hit, tiny shapes
+    for M in (1, 16):
+        x = jax.random.normal(key, (M, K), jnp.float32)
+        t_eva = _time(jax.jit(core_ops.eva_matmul), x, vq, iters=3, warmup=1)
+        t_deq = _time(jax.jit(core_ops.dequant_matmul), x, vq, iters=3,
+                      warmup=1)
+        report(f"smoke/eva_m{M}_{K}x{N}", t_eva * 1e6,
+               f"dequant_us={t_deq*1e6:.0f};{plan_fields(_plan(x, vq))}")
+        report(f"smoke/dequant_m{M}_{K}x{N}", t_deq * 1e6,
+               plan_fields(_plan(x, vq, vq_mode="dequant")))
+
+    # ranked Pallas path (interpret): fused vs split candidates priced by
+    # the Planner; the row records the decision + what first-match would
+    # have picked
+    x1 = jax.random.normal(key, (1, K), jnp.float32)
+    pl = plan_mod.plan_vq(x1, vq, plan_mod.PlanPolicy(
+        vq_mode="eva", impl="pallas", interpret=True))
+    t_pal = _time(pl.execute, x1, vq, iters=2, warmup=1)
+    report(f"smoke/pallas_ranked_interpret_{K}x{N}", t_pal * 1e6,
+           f"interpret-mode;{plan_fields(pl)}")

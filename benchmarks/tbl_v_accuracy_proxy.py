@@ -63,7 +63,7 @@ def run(report, steps: int = 60):
                   for k, v in global_batch_at(dcfg, 10_000).items()}
 
     def ppl(p, vq_mode="none"):
-        loss = model.loss(p, eval_batch, rc.replace(vq_mode=vq_mode))
+        loss = model.loss(p, eval_batch, rc.replace_policy(vq_mode=vq_mode))
         return float(jnp.exp(loss))
 
     key = jax.random.PRNGKey(1)

@@ -20,9 +20,9 @@ the chosen backend and every resolved number. This module keeps
   * the epilogue cost models (`select_epilogue` + the auto block sizers)
     that the jnp EVA backend registrations consult, and
   * `eva_matmul` / `vq_matmul` as thin convenience wrappers over
-    `Planner.plan(...).execute(...)` — one deprecation cycle still
-    accepts the legacy `flat_gather=` / `block_v=None` spellings with a
-    DeprecationWarning.
+    `Planner.plan(...).execute(...)`. The PR-3 deprecation cycle is
+    over: the legacy `flat_gather=` spelling is gone and passing None
+    for `block_v` raises (use epilogue="direct" / block_v="auto").
 
 The four jnp epilogue formulations (direct / flat / v-blocked gather /
 v-blocked reconstruct-GEMM) are algebraically identical and chosen per
@@ -32,7 +32,6 @@ sweep (the PR-1 batched-decode regression).
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -203,7 +202,7 @@ def _in_mesh_context() -> bool:
     _mesh_divides/_maybe_constrain (no public ambient-mesh API on this
     jax); if a jax upgrade moves it, all three degrade together to the
     single-host behavior and distributed callers should set
-    RunConfig(epilogue="flat") explicitly."""
+    PlanPolicy(epilogue="flat") explicitly."""
     try:
         from jax._src import mesh as mesh_lib
 
@@ -212,58 +211,28 @@ def _in_mesh_context() -> bool:
         return False
 
 
-_UNSET = object()  # sentinel: legacy kwarg not passed at all
-
-
-def _legacy_eva_args(epilogue, block_v, flat_gather, impl: str
+def _eva_policy_args(epilogue, block_v, impl: str
                      ) -> Tuple[str, Optional[int]]:
-    """Normalize the legacy eva_matmul argument surface to the plan API's
+    """Normalize the eva_matmul keyword surface to the plan API's
     (epilogue, block_v) pair.
 
-    The removed spellings — ``flat_gather=`` and ``block_v=None`` — are
-    accepted for ONE deprecation cycle with a DeprecationWarning; the
-    plan API itself (PlanPolicy) knows only ``epilogue="flat"`` /
-    ``"direct"``. Conflicting combinations raise the same loud
-    ValueErrors as before."""
-    if flat_gather is not _UNSET:
-        warnings.warn(
-            "eva_matmul(flat_gather=True) is deprecated; pass "
-            "epilogue='flat' instead" if flat_gather else
-            "eva_matmul(flat_gather=False) is deprecated; drop the kwarg "
-            "(it is the default)", DeprecationWarning, stacklevel=3)
-        if flat_gather:
-            if isinstance(block_v, int) and not isinstance(block_v, bool):
-                raise ValueError(
-                    "flat_gather=True conflicts with an explicit block_v="
-                    f"{block_v}: the flat epilogue has no v-blocking (this "
-                    "combination used to silently drop flat_gather)")
-            if epilogue not in (None, "flat"):
-                raise ValueError(
-                    f"flat_gather=True conflicts with epilogue={epilogue!r}; "
-                    "drop flat_gather (it is the legacy alias for "
-                    "epilogue='flat')")
-            epilogue = "flat"
+    ``block_v="auto"`` means auto-sized (PlanPolicy None); a bare int
+    with the default epilogue selects the v-blocked gather scan on jnp
+    (and pins the kernel v-tiles on Pallas). Passing None for block_v
+    was the pre-plan spelling of the direct epilogue and is REMOVED —
+    it raises here so stale callers fail loudly instead of silently
+    changing formulation."""
     if block_v is None:
-        if epilogue not in (None, "direct"):
-            raise ValueError(
-                f"epilogue={epilogue!r} with block_v=None is contradictory "
-                "(block_v=None is the legacy spelling of the direct "
-                "epilogue); pass block_v='auto' or an int")
-        if impl == "pallas":
-            raise ValueError(
-                "block_v=None (the legacy spelling of epilogue='direct') "
-                "does not apply to impl='pallas' — the fused kernel always "
-                "tiles; pass block_v='auto' or an int")
-        warnings.warn(
-            "eva_matmul(block_v=None) is deprecated; pass epilogue='direct' "
-            "instead", DeprecationWarning, stacklevel=3)
-        return "direct", None
+        raise ValueError(
+            "passing None for block_v was removed (it was the legacy "
+            "spelling of the direct epilogue); pass epilogue='direct', "
+            "block_v='auto' or an int")
     # "auto" -> None (auto-sized); ints pass through; anything else is left
     # for PlanPolicy's loud block_v validation
     bv = None if block_v == "auto" else block_v
     if epilogue is None:
         if isinstance(bv, int) and not isinstance(bv, bool) and impl == "jnp":
-            # legacy: a bare int block_v selected the v-blocked gather scan
+            # a bare int block_v selects the v-blocked gather scan
             return "blocked", bv
         return "auto", bv
     return epilogue, bv
@@ -438,15 +407,14 @@ def eva_matmul(
     out_dtype=None,
     impl: str = "jnp",
     interpret: bool = False,
-    flat_gather=_UNSET,
 ) -> jax.Array:
     """EVA decode matmul: y = x @ W_hat via output-codebook lookup.
 
     Thin convenience wrapper over ``Planner.plan(...).execute(...)`` —
     derives a LinearSpec from (x, vq), builds a PlanPolicy from the
     keyword surface and executes the cached plan. See core/plan.py for
-    the dispatch layer and `select_epilogue` for the cost models / the
-    measured regime table of the jnp epilogues:
+    the ranked dispatch layer and `select_epilogue` for the cost models /
+    the measured regime table of the jnp epilogues:
 
       epilogue="auto" / block_v="auto" (the default): choose per shape —
         direct gather in the M < d decode regime, v-blocked gather once
@@ -455,16 +423,14 @@ def eva_matmul(
       epilogue="direct" | "flat" | "blocked" | "recon": force a
         formulation; an int ``block_v`` pins the v-block of the
         v-blocked kinds.
-      impl="pallas": the fused tiled kernel (an int ``block_v`` pins its
+      impl="pallas": the Planner ranks the fused tiled kernel against
+        the two-kernel vq_gemm+oc_lookup split backend by calibrated
+        predicted time (an int ``block_v`` pins the chosen kernel's
         v-tiles; jnp epilogue requests are invalid there).
-
-    The legacy ``flat_gather=`` and ``block_v=None`` spellings are
-    accepted for one deprecation cycle (DeprecationWarning) and map to
-    epilogue="flat" / "direct"; conflicting combinations raise ValueError.
     """
     from repro.core import plan as plan_mod
 
-    epi, bv = _legacy_eva_args(epilogue, block_v, flat_gather, impl)
+    epi, bv = _eva_policy_args(epilogue, block_v, impl)
     policy = plan_mod.PlanPolicy(vq_mode="eva", impl=impl, epilogue=epi,
                                  block_v=bv, interpret=interpret)
     return plan_mod.plan_vq(x, vq, policy, out_dtype=out_dtype).execute(x, vq)
@@ -505,7 +471,7 @@ def vq_matmul(
     from repro.core import plan as plan_mod
 
     if mode == "eva":
-        epi, bv = _legacy_eva_args(epilogue, block_v, _UNSET, impl)
+        epi, bv = _eva_policy_args(epilogue, block_v, impl)
     elif mode == "dequant":
         epi = "auto"
         bv = block_v if isinstance(block_v, int) \

@@ -18,8 +18,9 @@ module is the selection layer:
   MatmulPlan   : the concrete executable: chosen backend plus every
                  resolved number (epilogue kind + block_v for jnp;
                  m/v/n tiles for the Pallas kernels — nothing re-derived
-                 at execute time) and cost-model estimates for
-                 introspection. ``plan.execute(x, leaf)`` runs it;
+                 at execute time), cost-model estimates, the predicted
+                 execution time that ranked it and the provenance of
+                 that prediction. ``plan.execute(x, leaf)`` runs it;
                  ``plan.describe()`` names it for logs/benchmarks.
   Planner      : LRU cache mapping (LinearSpec, PlanPolicy) -> MatmulPlan.
                  Same spec+policy returns the SAME plan object; inside a
@@ -27,6 +28,17 @@ module is the selection layer:
                  tracing, never on the executed path.
 
 Backends register via ``register_backend(name, matcher, planner_fn)``.
+Selection is COST-RANKED: the planner collects every backend whose
+matcher accepts (spec, policy), prices each candidate's PlanCost through
+the per-backend time model in ``core/calibrate.py`` (constants fitted
+from committed BENCH_measured.json rows when CALIBRATION.json is
+present, shared analytic rates otherwise) and picks the cheapest;
+registration order only breaks exact ties. The losing candidates are
+recorded on the chosen plan (``plan.ranking``) so logs and benchmarks
+can show the decision. Most policies admit a single candidate — the
+genuine trade-off today is ``impl="pallas"``, where the fused kernel
+and the two-kernel vq_gemm+oc_lookup split backend both match.
+
 The pure-jnp formulations are registered here; the Pallas kernels
 register themselves from ``kernels/*/ops.py`` (each owns its tile model)
 and are imported lazily on first use, so ``core`` never imports kernel
@@ -48,6 +60,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import calibrate as calibrate_mod
 from repro.core import ops
 from repro.core.ops import EPILOGUES
 from repro.core.vq import VQWeight
@@ -178,17 +191,24 @@ class PlanPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class PlanCost:
-    """Analytic estimates for introspection and benchmark reporting.
+    """Analytic estimates for ranking, introspection and benchmarking.
 
     ``macs``         : multiply-accumulates on the GEMM/MXU path.
     ``lookup_adds``  : add-only lookup/reconstruction work (the paper's
                        epilogue adds; 0 for dense/int8).
     ``weight_bytes`` : per-call weight-side HBM traffic (compressed for
-                       VQ kinds)."""
+                       VQ kinds).
+    ``intermediate_bytes`` : extra HBM round-trip traffic of multi-kernel
+                       formulations (the split backend's (C, M, V, 2^n)
+                       output-codebook buffer; 0 for fused/jnp paths).
+    ``launches``     : kernel launches per call (prices dispatch overhead
+                       in the calibrated time model)."""
 
     macs: int
     lookup_adds: int
     weight_bytes: int
+    intermediate_bytes: int = 0
+    launches: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +217,9 @@ class MatmulPlan:
 
     ``config`` holds every resolved number the backend needs (epilogue
     kind, block_v, kernel tiles, ...) — ``execute`` re-derives nothing.
+    ``predicted_us``/``provenance``/``ranking`` record how the Planner
+    ranked this backend against the other eligible candidates
+    ("analytic" constants or a fitted "eva-calibration/v1" entry).
     """
 
     backend: str
@@ -205,6 +228,9 @@ class MatmulPlan:
     config: Tuple[Tuple[str, Any], ...]
     cost: PlanCost
     run: Callable[[Any, Any], Any]
+    predicted_us: Optional[float] = None
+    provenance: str = "analytic"
+    ranking: Tuple[Tuple[str, float], ...] = ()
 
     def execute(self, x, leaf):
         """Run the planned matmul. ``leaf`` is the weight leaf the spec
@@ -223,7 +249,16 @@ class MatmulPlan:
         parts += [f"{k}={v}" for k, v in self.config]
         if self.policy.interpret:
             parts.append("interpret")
+        if self.predicted_us is not None:
+            parts.append(f"pred={self.predicted_us:.0f}us({self.provenance})")
         return " ".join(parts)
+
+    def describe_ranking(self) -> str:
+        """The ranked candidate set, cheapest first ('' when only one
+        backend was eligible)."""
+        if len(self.ranking) < 2:
+            return ""
+        return " < ".join(f"{b}={us:.0f}us" for b, us in self.ranking)
 
 
 def vq_weight_bytes(spec: LinearSpec) -> int:
@@ -253,6 +288,7 @@ _REGISTRY_LOCK = threading.Lock()
 # no-match retry) so pure-jnp workloads never import pallas
 _KERNEL_BACKEND_MODULES = (
     "repro.kernels.fused_vq_matmul.ops",
+    "repro.kernels.oc_lookup.ops",
     "repro.kernels.dequant_gemv.ops",
     "repro.kernels.int8_gemm.ops",
 )
@@ -265,10 +301,11 @@ def register_backend(name: str,
                      ) -> None:
     """Register (or idempotently re-register) a matmul backend.
 
-    ``matcher(spec, policy)`` says whether this backend executes the
+    ``matcher(spec, policy)`` says whether this backend can execute the
     site; ``planner_fn(spec, policy)`` freezes every tile size / epilogue
-    choice into a MatmulPlan. Matchers are evaluated in registration
-    order; the first match wins."""
+    choice into a MatmulPlan. Every matching backend becomes a ranking
+    candidate priced by its cost model; registration order only breaks
+    exact predicted-time ties."""
     with _REGISTRY_LOCK:
         _REGISTRY[name] = _Backend(name, matcher, planner_fn)
 
@@ -302,15 +339,41 @@ class Planner:
 
     Planning happens at Python/trace time only: a jitted decode step
     consults the planner while tracing and bakes ``plan.run`` into the
-    program, so repeated executed steps never re-enter ``plan``."""
+    program, so repeated executed steps never re-enter ``plan``.
 
-    def __init__(self, maxsize: int = 1024):
+    Selection is cost-ranked: every backend whose matcher accepts the
+    (spec, policy) pair is built as a candidate and priced through the
+    per-backend time model (``calibration`` — fitted constants from
+    CALIBRATION.json — when an entry exists, the shared analytic rates
+    otherwise); the cheapest predicted time wins and ties fall back to
+    registration order. ``calibration="default"`` loads the file named
+    by $EVA_CALIBRATION (default ./CALIBRATION.json) at construction;
+    ``reload_calibration`` swaps the model for FUTURE planning without
+    touching cached plans — plan identity never depends on the cost
+    model, only the choice among multiple eligible backends does."""
+
+    def __init__(self, maxsize: int = 1024,
+                 calibration: Any = "default"):
         self._cache: "collections.OrderedDict[Tuple[LinearSpec, PlanPolicy], MatmulPlan]" = (
             collections.OrderedDict())
         self._maxsize = maxsize
         self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
+        self._calibration: Optional[calibrate_mod.Calibration] = (
+            calibrate_mod.load_default_calibration()
+            if calibration == "default" else calibration)
+
+    @property
+    def calibration(self) -> Optional[calibrate_mod.Calibration]:
+        return self._calibration
+
+    def reload_calibration(self, calibration: Any = "default") -> None:
+        """Swap the cost model used for future planning. Cached plans are
+        untouched: the same (spec, policy) keeps returning the SAME plan
+        object (re-planning under new constants requires cache_clear)."""
+        self._calibration = (calibrate_mod.load_default_calibration()
+                             if calibration == "default" else calibration)
 
     def plan(self, spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
         key = (spec, policy)
@@ -325,15 +388,15 @@ class Planner:
         # pallas imports. A no-match retry covers custom late loads.
         if policy.impl == "pallas":
             _ensure_kernel_backends()
-        backend = self._match(spec, policy)
-        if backend is None and not _kernels_loaded:
+        matched = self._match_all(spec, policy)
+        if not matched and not _kernels_loaded:
             _ensure_kernel_backends()
-            backend = self._match(spec, policy)
-        if backend is None:
+            matched = self._match_all(spec, policy)
+        if not matched:
             raise ValueError(
                 f"no registered backend matches spec={spec} policy={policy}; "
                 f"registered: {tuple(_REGISTRY)}")
-        built = backend.planner_fn(spec, policy)
+        built = self._rank(matched, spec, policy)
         with self._lock:  # (re-planning a raced key is harmless)
             self._misses += 1
             self._cache[key] = built
@@ -341,14 +404,54 @@ class Planner:
                 self._cache.popitem(last=False)
         return built
 
+    def _rank(self, matched: Tuple[_Backend, ...], spec: LinearSpec,
+              policy: PlanPolicy) -> MatmulPlan:
+        """Build every eligible candidate, price it, pick the cheapest
+        (registration order breaks ties), and record the ranking +
+        provenance on the chosen plan.
+
+        Candidates are only cross-compared under ONE model: calibrated
+        when EVERY candidate has a usable fitted entry, analytic
+        otherwise — mixing a backend's fitted microseconds against
+        another's order-of-magnitude analytic constants would make the
+        comparison meaningless (a partial CALIBRATION.json must not
+        flip rankings)."""
+        candidates = [be.planner_fn(spec, policy) for be in matched]
+        entries = [self._usable_entry(c.backend) for c in candidates]
+        if all(e is not None for e in entries):
+            prov = self._calibration.version
+        else:
+            prov = "analytic"
+            entries = [None] * len(candidates)
+        scored: List[Tuple[float, int, MatmulPlan]] = []
+        for order, (candidate, entry) in enumerate(zip(candidates, entries)):
+            us = calibrate_mod.predict_us(
+                candidate.cost, entry or calibrate_mod.ANALYTIC)
+            scored.append((us, order, candidate))
+        scored.sort(key=lambda t: (t[0], t[1]))
+        us, _, chosen = scored[0]
+        return dataclasses.replace(
+            chosen, predicted_us=us, provenance=prov,
+            ranking=tuple((c.backend, round(u, 3)) for u, _, c in scored),
+        )
+
+    def _usable_entry(self, backend: str
+                      ) -> Optional["calibrate_mod.BackendCalibration"]:
+        """The backend's fitted entry when it rests on enough samples to
+        trust (calibrate.MIN_FIT_ROWS — an NNLS over fewer rows than
+        free parameters fits perfectly but means nothing)."""
+        calib = self._calibration
+        entry = calib.get(backend) if calib is not None else None
+        if entry is not None and entry.rows >= calibrate_mod.MIN_FIT_ROWS:
+            return entry
+        return None
+
     @staticmethod
-    def _match(spec: LinearSpec, policy: PlanPolicy) -> Optional[_Backend]:
+    def _match_all(spec: LinearSpec, policy: PlanPolicy
+                   ) -> Tuple[_Backend, ...]:
         with _REGISTRY_LOCK:  # snapshot: register_backend may race
             backends = tuple(_REGISTRY.values())
-        for be in backends:
-            if be.matcher(spec, policy):
-                return be
-        return None
+        return tuple(be for be in backends if be.matcher(spec, policy))
 
     def cache_info(self) -> CacheInfo:
         return CacheInfo(self._hits, self._misses, len(self._cache),
@@ -371,6 +474,16 @@ def default_planner() -> Planner:
 def plan(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
     """Resolve (spec, policy) through the default planner's cache."""
     return _PLANNER.plan(spec, policy)
+
+
+def first_match_backend(spec: LinearSpec, policy: PlanPolicy
+                        ) -> Optional[str]:
+    """The backend the pre-ranking FIRST-MATCH dispatch would have
+    chosen (registration order). Benchmarks report it next to the ranked
+    choice so ranked-vs-first-match decisions stay visible."""
+    _ensure_kernel_backends()
+    matched = Planner._match_all(spec, policy)
+    return matched[0].name if matched else None
 
 
 # ---------------------------------------------------------------------------

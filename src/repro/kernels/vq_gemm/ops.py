@@ -1,4 +1,11 @@
-"""Jit'd wrapper for the VQ-GEMM kernel (handles padding + reshape)."""
+"""Jit'd wrapper for the VQ-GEMM kernel (handles padding + reshape).
+
+This module owns the kernel's tile model (`select_gemm_block_mv`): the
+per-grid-step VMEM footprint is the x tile (bmv, d) plus the O tile
+(bmv, k) fp32, sized against the shared FUSED_GATHER_TILE_BYTES budget
+in core/ops.py. The two-kernel `eva_split_pallas` backend (registered
+from kernels/oc_lookup/ops.py) consumes it to freeze block_mv at plan
+time."""
 from __future__ import annotations
 
 import functools
@@ -6,8 +13,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import ops as core_ops
 from repro.kernels.vq_gemm.kernel import vq_gemm_pallas
 from repro.kernels.vq_gemm.ref import vq_gemm_ref
+
+
+def select_gemm_block_mv(MV: int, d: int, k: int) -> int:
+    """Largest power-of-two MV tile whose (bmv, d) x tile + (bmv, k) O
+    tile fp32 fit the shared tile budget, clamped to [8, 1024] AND to
+    the next power of two above the actual problem (the wrapper pads MV
+    up to a tile multiple — a decode-sized MV must not pad to a full
+    budget-sized tile of dead rows)."""
+    per_row = 4 * (d + k)
+    bmv = max(8, core_ops.FUSED_GATHER_TILE_BYTES // max(per_row, 1))
+    pow2_ceil_mv = 1 << max(int(MV) - 1, 1).bit_length()
+    bmv = min(bmv, 1024, pow2_ceil_mv)
+    return max(8, core_ops._pow2_floor(bmv))
 
 
 @functools.partial(jax.jit, static_argnames=("block_mv", "interpret", "use_pallas"))

@@ -31,6 +31,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as steps_mod
 from repro.models.api import Model, SHAPES, build_model
+from repro.core.plan import PlanPolicy
 from repro.models.common import RunConfig
 from repro.roofline.analysis import analyze_compiled, model_flops
 from repro.core.vq import VQWeight
@@ -92,16 +93,25 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
             shape, kv_int8=ov.get("kv_cache_int8", False),
             kv_int4=ov.get("kv_cache_int4", False))
 
+        # execution knobs live inside PlanPolicy; any policy-level
+        # override in rc_overrides is split out of the flat RunConfig kw
+        pol_kw = {f: ov.pop(f) for f in
+                  ("vq_mode", "impl", "epilogue", "block_v", "int8_prefill",
+                   "interpret") if f in ov}
         if kind == "train":
-            rc = RunConfig(mode="train", remat=True, attn_chunk=2048, **ov)
+            rc = RunConfig(mode="train", remat=True, attn_chunk=2048,
+                           plan_policy=PlanPolicy(**pol_kw), **ov)
             lowered = steps_mod.lower_train_step(model, mesh, specs, rc)
         elif kind == "prefill":
-            rc = RunConfig(mode="prefill", remat=False, int8_prefill=True,
-                           attn_chunk=2048, **ov)
+            pol_kw.setdefault("int8_prefill", True)
+            rc = RunConfig(mode="prefill", remat=False, attn_chunk=2048,
+                           plan_policy=PlanPolicy(**pol_kw), **ov)
             lowered = steps_mod.lower_prefill_step(model, mesh, specs, rc,
                                                    quantized=True)
         else:
-            rc = RunConfig(mode="decode", remat=False, vq_mode=vq_mode, **ov)
+            pol_kw.setdefault("vq_mode", vq_mode)
+            rc = RunConfig(mode="decode", remat=False,
+                           plan_policy=PlanPolicy(**pol_kw), **ov)
             lowered = steps_mod.lower_decode_step(model, mesh, specs, rc,
                                                   quantized=True,
                                                   vq_mode=vq_mode,

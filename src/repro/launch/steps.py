@@ -153,7 +153,7 @@ def lower_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
     """specs: {"tokens", "positions", "caches"} from model.input_specs."""
     rc = rc or RunConfig(mode="decode", remat=False,
                          plan_policy=PlanPolicy(vq_mode=vq_mode))
-    rc = rc.replace(vq_mode=vq_mode if quantized else "none")
+    rc = rc.replace_policy(vq_mode=vq_mode if quantized else "none")
     param_specs = model.param_specs(quantized=quantized,
                                     quantize_lm_head=quantize_lm_head)
     step = make_decode_step(model, rc)

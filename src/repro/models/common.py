@@ -99,20 +99,11 @@ class ModelConfig:
         return ((self.vocab_size + 127) // 128) * 128
 
 
-# legacy RunConfig knobs that now live inside PlanPolicy; kept one
-# deprecation cycle as shims that (re)build the policy
-_POLICY_SHIM_FIELDS = ("vq_mode", "impl", "int8_prefill", "interpret",
-                       "epilogue", "epilogue_block_v")
-_POLICY_SHIM_DEFAULTS = {"vq_mode": "none", "impl": "jnp",
-                         "int8_prefill": False, "interpret": False,
-                         "epilogue": "auto", "epilogue_block_v": None}
-
-
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
     """Static execution-mode knobs threaded through every block.
 
-    How a matmul executes is a single typed field now: ``plan_policy``
+    How a matmul executes is a single typed field: ``plan_policy``
     (core/plan.py PlanPolicy) — vq_mode, impl, epilogue + block_v,
     int8_prefill and interpret in one frozen, validated object. Every
     linear layer derives a LinearSpec from its (input, weight) and
@@ -125,75 +116,41 @@ class RunConfig:
         RunConfig(mode="decode",
                   plan_policy=PlanPolicy(vq_mode="eva", impl="pallas"))
 
-    DEPRECATED (one cycle): the flat knobs ``vq_mode``/``impl``/
-    ``int8_prefill``/``interpret``/``epilogue``/``epilogue_block_v``
-    still work — when ``plan_policy`` is not given they build one, and
-    ``replace()`` on any of them rebuilds it — but new code should pass
-    ``plan_policy``. The mirrors are kept in sync with the policy, so
-    reading ``rc.vq_mode`` etc. keeps working during the cycle.
+    The PR-3 flat-knob shims (vq_mode/impl/int8_prefill/interpret/
+    epilogue/epilogue_block_v as RunConfig fields) finished their
+    deprecation cycle and are REMOVED — constructing a RunConfig with
+    one raises TypeError; to derive a config with a different execution
+    knob, use the policy-replace helper:
+
+        rc.replace_policy(vq_mode="dequant")
 
     Non-execution knobs (mode, attention chunking, remat, the §Perf
     levers) stay flat fields.
     """
     mode: str = "train"          # train | prefill | decode
-    plan_policy: Optional[PlanPolicy] = None  # execution policy (see above)
+    plan_policy: PlanPolicy = PlanPolicy()  # execution policy (see above)
     attn_chunk: int = 1024       # kv/q chunk for blocked attention
     attn_skip_oob_chunks: bool = False  # hillclimb: skip fully-masked chunks
     remat: bool = True
-    # ---- DEPRECATED plan_policy shims (one cycle; see class docstring) ----
-    vq_mode: str = "none"        # none | eva | dequant   (FC layers)
-    impl: str = "jnp"            # jnp | pallas
-    int8_prefill: bool = False   # paper's INT8 prefill path
-    interpret: bool = False      # pallas interpret mode (CPU validation)
-    epilogue: str = "auto"
-    epilogue_block_v: Optional[int] = None
     # ---- perf-iteration levers (EXPERIMENTS.md §Perf) ----
     lm_head_last_only: bool = False  # prefill: project only the last token
     mla_absorb: bool = False         # MLA decode in latent space (weight absorption)
     kv_cache_int8: bool = False      # int8-quantized KV cache (GQA decode)
     kv_cache_int4: bool = False      # int4-quantized KV cache (more aggressive)
 
-    def __post_init__(self):
-        if self.plan_policy is None:
-            object.__setattr__(self, "plan_policy", PlanPolicy(
-                vq_mode=self.vq_mode, impl=self.impl,
-                epilogue=self.epilogue, block_v=self.epilogue_block_v,
-                int8_prefill=self.int8_prefill, interpret=self.interpret,
-            ))
-            return
-        # plan_policy given: reject conflicting explicit legacy knobs,
-        # then mirror the policy into them so direct reads stay coherent
-        pol = self.plan_policy
-        mirror = {"vq_mode": pol.vq_mode, "impl": pol.impl,
-                  "int8_prefill": pol.int8_prefill,
-                  "interpret": pol.interpret, "epilogue": pol.epilogue,
-                  "epilogue_block_v": pol.block_v}
-        for f in _POLICY_SHIM_FIELDS:
-            cur = getattr(self, f)
-            if cur != _POLICY_SHIM_DEFAULTS[f] and cur != mirror[f]:
-                raise ValueError(
-                    f"RunConfig({f}={cur!r}) conflicts with the explicit "
-                    f"plan_policy ({f.replace('epilogue_block_v', 'block_v')}"
-                    f"={mirror[f]!r}); pass execution knobs inside "
-                    "plan_policy only")
-            object.__setattr__(self, f, mirror[f])
-
     @property
     def policy(self) -> PlanPolicy:
-        """The resolved execution policy (never None after init)."""
+        """The execution policy (alias of ``plan_policy``)."""
         return self.plan_policy
 
     def replace(self, **kw) -> "RunConfig":
-        """dataclasses.replace that keeps plan_policy and the deprecated
-        flat knobs coherent: replacing a legacy knob rebuilds the policy
-        from the (updated) flat fields; replacing the policy resets any
-        legacy mirror not explicitly passed alongside it."""
-        if kw.get("plan_policy") is not None:
-            for f in _POLICY_SHIM_FIELDS:
-                kw.setdefault(f, _POLICY_SHIM_DEFAULTS[f])
-        elif any(f in kw for f in _POLICY_SHIM_FIELDS):
-            kw["plan_policy"] = None
         return dataclasses.replace(self, **kw)
+
+    def replace_policy(self, **kw) -> "RunConfig":
+        """Derive a RunConfig with some policy knobs replaced, e.g.
+        ``rc.replace_policy(vq_mode="dequant")``."""
+        return dataclasses.replace(
+            self, plan_policy=dataclasses.replace(self.plan_policy, **kw))
 
 
 # ---------------------------------------------------------------------------

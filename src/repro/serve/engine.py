@@ -82,10 +82,16 @@ class Engine:
         }
         for phase, plans in self.plans.items():
             uniq: Dict[str, int] = {}
+            rankings: Dict[str, int] = {}
             for _path, pl in plans:
                 uniq[pl.describe()] = uniq.get(pl.describe(), 0) + 1
+                rk = pl.describe_ranking()
+                if rk:  # >1 eligible backend: show the predicted-time order
+                    rankings[rk] = rankings.get(rk, 0) + 1
             for desc, count in sorted(uniq.items()):
                 log.info("%s plan [%d leaves] %s", phase, count, desc)
+            for rk, count in sorted(rankings.items()):
+                log.info("%s ranking [%d leaves] %s", phase, count, rk)
 
         self._decode_fn = jax.jit(
             functools.partial(self._decode_impl, rc=rc.replace(mode="decode")),

@@ -1,0 +1,139 @@
+"""core/calibrate.py: the per-backend time model the ranked Planner
+prices candidates with — NNLS fitting from bench rows, interpret-row
+exclusion, versioned persistence, and the analytic fallback."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate
+
+
+def _row(backend, us, *, macs=1000, adds=2000, bytes_=3000, module="measured",
+         extra=None):
+    derived = {"plan": f"{backend} M=1 K=8 N=8", "backend": backend,
+               "macs": macs, "lookup_adds": adds, "weight_bytes": bytes_}
+    derived.update(extra or {})
+    return {"module": module, "name": f"measured/{backend}", "derived": derived,
+            "us_per_call": us}
+
+
+def _doc(rows):
+    return {"schema": "eva-bench-rows/v1", "rows": rows}
+
+
+class TestFit:
+    def test_recovers_linear_model(self):
+        """Rows generated from known constants fit back to a model that
+        predicts them (the exact coefficients may differ — the fit only
+        has to agree on the observable timings)."""
+        true = calibrate.BackendCalibration(
+            overhead_us=40.0, us_per_mac=1e-4, us_per_add=5e-4,
+            us_per_byte=2e-5)
+        rows = []
+        rng = np.random.default_rng(0)
+        samples = []
+        for _ in range(8):
+            macs = int(rng.integers(10_000, 5_000_000))
+            adds = int(rng.integers(10_000, 5_000_000))
+            b = int(rng.integers(10_000, 5_000_000))
+            us = calibrate.predict_us(
+                type("C", (), dict(macs=macs, lookup_adds=adds,
+                                   weight_bytes=b, intermediate_bytes=0,
+                                   launches=1))(), true)
+            rows.append(_row("eva_direct", us, macs=macs, adds=adds, bytes_=b))
+            samples.append((macs, adds, b, us))
+        calib = calibrate.fit_calibration(_doc(rows), source="synthetic")
+        entry = calib.get("eva_direct")
+        assert entry is not None and entry.rows == 8
+        assert entry.mean_abs_rel_err < 0.01
+        for macs, adds, b, us in samples:
+            cost = type("C", (), dict(macs=macs, lookup_adds=adds,
+                                      weight_bytes=b, intermediate_bytes=0,
+                                      launches=1))()
+            assert calibrate.predict_us(cost, entry) == pytest.approx(
+                us, rel=0.02)
+
+    def test_interpret_rows_excluded(self):
+        rows = [_row("eva_fused_pallas", 999.0, extra={"interpret": 1}),
+                _row("eva_direct", 100.0)]
+        calib = calibrate.fit_calibration(_doc(rows))
+        assert calib.get("eva_fused_pallas") is None
+        assert calib.get("eva_direct") is not None
+
+    def test_rows_missing_cost_fields_excluded(self):
+        bad = _row("eva_flat", 50.0)
+        del bad["derived"]["macs"]
+        calib = calibrate.fit_calibration(_doc([bad]))
+        assert calib.backends == {}
+
+    def test_failed_rows_excluded(self):
+        calib = calibrate.fit_calibration(_doc([_row("eva_direct", -1.0)]))
+        assert calib.backends == {}
+
+    def test_nonnegative_coefficients(self):
+        """Anticorrelated noise must clamp, not go negative (a negative
+        rate would let a backend 'pay itself' on big shapes)."""
+        rows = [_row("eva_recon", 100.0, macs=10_000, adds=10, bytes_=10),
+                _row("eva_recon", 50.0, macs=20_000, adds=10, bytes_=10)]
+        entry = calibrate.fit_calibration(_doc(rows)).get("eva_recon")
+        for f in ("overhead_us", "us_per_mac", "us_per_add", "us_per_byte"):
+            assert getattr(entry, f) >= 0.0
+
+
+class TestPersistence:
+    def test_roundtrip(self, tmp_path):
+        calib = calibrate.fit_calibration(_doc([_row("eva_direct", 120.0)]),
+                                          source="BENCH_measured.json")
+        path = str(tmp_path / "CALIBRATION.json")
+        calibrate.save_calibration(calib, path)
+        loaded = calibrate.load_calibration(path)
+        assert loaded is not None
+        assert loaded.version == calibrate.SCHEMA
+        assert loaded.source == "BENCH_measured.json"
+        assert loaded.get("eva_direct") == calib.get("eva_direct")
+
+    def test_version_mismatch_returns_none(self, tmp_path):
+        path = str(tmp_path / "CALIBRATION.json")
+        with open(path, "w") as f:
+            json.dump({"schema": "eva-calibration/v0", "backends": {}}, f)
+        assert calibrate.load_calibration(path) is None
+
+    def test_missing_or_garbage_returns_none(self, tmp_path):
+        assert calibrate.load_calibration(str(tmp_path / "nope.json")) is None
+        path = str(tmp_path / "bad.json")
+        with open(path, "w") as f:
+            f.write("{not json")
+        assert calibrate.load_calibration(path) is None
+
+    def test_env_var_overrides_default_path(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "alt.json")
+        calibrate.save_calibration(
+            calibrate.Calibration(calibrate.SCHEMA, "alt", {}), path)
+        monkeypatch.setenv(calibrate.ENV_VAR, path)
+        assert calibrate.default_calibration_path() == path
+        loaded = calibrate.load_default_calibration()
+        assert loaded is not None and loaded.source == "alt"
+
+
+class TestPredict:
+    def test_terms_priced_independently(self):
+        entry = calibrate.BackendCalibration(
+            overhead_us=10.0, us_per_mac=1.0, us_per_add=2.0, us_per_byte=3.0)
+        cost = type("C", (), dict(macs=5, lookup_adds=7, weight_bytes=11,
+                                  intermediate_bytes=13, launches=2))()
+        assert calibrate.predict_us(cost, entry) == pytest.approx(
+            10 * 2 + 5 * 1 + 7 * 2 + (11 + 13) * 3)
+
+    def test_analytic_prefers_fused_over_split_shape(self):
+        """The analytic fallback must rank the fused kernel ahead of the
+        two-kernel split at identical work: the split pays the OC
+        round-trip (intermediate_bytes) and a second launch."""
+        fused = type("C", (), dict(macs=1000, lookup_adds=1000,
+                                   weight_bytes=1000, intermediate_bytes=0,
+                                   launches=1))()
+        split = type("C", (), dict(macs=1000, lookup_adds=1000,
+                                   weight_bytes=1000,
+                                   intermediate_bytes=8000, launches=2))()
+        assert calibrate.predict_us(fused, calibrate.ANALYTIC) < \
+            calibrate.predict_us(split, calibrate.ANALYTIC)

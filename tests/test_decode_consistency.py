@@ -9,6 +9,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import build_model
+from repro.core.plan import PlanPolicy
 from repro.models.common import RunConfig
 from repro.serve.kvcache import pad_prefill_cache
 
@@ -88,9 +89,9 @@ def test_quantized_decode_eva_equals_dequant(arch):
     pos = jnp.full((B, 1), S_PROMPT, jnp.int32)
     tok = tokens[:, S_PROMPT:S_PROMPT + 1]
     l_eva, _ = model.decode(qparams, tok, pos, caches,
-                            RunConfig(mode="decode", vq_mode="eva", remat=False))
+                            RunConfig(mode="decode", plan_policy=PlanPolicy(vq_mode="eva"), remat=False))
     l_deq, _ = model.decode(qparams, tok, pos, caches,
-                            RunConfig(mode="decode", vq_mode="dequant", remat=False))
+                            RunConfig(mode="decode", plan_policy=PlanPolicy(vq_mode="dequant"), remat=False))
     np.testing.assert_allclose(np.asarray(l_eva), np.asarray(l_deq),
                                rtol=1e-4, atol=1e-4)
 
@@ -104,11 +105,11 @@ def test_quantized_decode_pallas_impl():
     pos = jnp.zeros((B, 1), jnp.int32)
     tok = jnp.zeros((B, 1), jnp.int32)
     l_jnp, _ = model.decode(qparams, tok, pos, caches,
-                            RunConfig(mode="decode", vq_mode="eva", remat=False))
+                            RunConfig(mode="decode", plan_policy=PlanPolicy(vq_mode="eva"), remat=False))
     l_pal, _ = model.decode(
         qparams, tok, pos, caches,
-        RunConfig(mode="decode", vq_mode="eva", impl="pallas",
-                  interpret=True, remat=False),
+        RunConfig(mode="decode", remat=False, plan_policy=PlanPolicy(
+            vq_mode="eva", impl="pallas", interpret=True)),
     )
     np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pal),
                                rtol=1e-4, atol=1e-4)

@@ -192,12 +192,12 @@ def test_engine_vq_quantized(setup):
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
                for _ in range(3)]
-    rc_vq = rc.replace(vq_mode="eva")
+    rc_vq = rc.replace_policy(vq_mode="eva")
     eng = Engine(model, qparams, rc_vq, EngineConfig(num_slots=3, max_len=24))
     got = eng.generate(prompts, 4)
     assert all(len(v) == 4 for v in got.values())
     # eva and dequant paths agree token-for-token
-    eng2 = Engine(model, qparams, rc.replace(vq_mode="dequant"),
+    eng2 = Engine(model, qparams, rc.replace_policy(vq_mode="dequant"),
                   EngineConfig(num_slots=3, max_len=24))
     got2 = eng2.generate(prompts, 4)
     assert list(got.values()) == list(got2.values())

@@ -56,20 +56,24 @@ class TestEquivalence:
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=2e-4, atol=2e-4)
 
-    def test_legacy_argument_surface_still_works(self):
+    def test_bare_int_block_v_selects_blocked_scan(self):
         x, vq = _mk(80, 70, (), 3)
         ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
-        # still-supported legacy spellings (no warning)
+        # supported spellings: bare int block_v (v-blocked scan), defaults
         for kw in (dict(block_v=5), dict()):
             got = ops.eva_matmul(x, vq, out_dtype=jnp.float32, **kw)
             np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                        rtol=2e-4, atol=2e-4)
-        # removed spellings: one deprecation-warning cycle via the wrapper
-        for kw in (dict(block_v=None), dict(flat_gather=True)):
-            with pytest.deprecated_call():
-                got = ops.eva_matmul(x, vq, out_dtype=jnp.float32, **kw)
-            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                                       rtol=2e-4, atol=2e-4)
+
+    def test_removed_legacy_spellings_raise(self):
+        """The PR-3 deprecation cycle is over: flat_gather= is gone from
+        the signature and passing None for block_v raises instead of
+        selecting the direct epilogue."""
+        x, vq = _mk(80, 70, (), 3)
+        with pytest.raises(TypeError):
+            ops.eva_matmul(x, vq, flat_gather=True)  # lint-ok (removal test)
+        with pytest.raises(ValueError, match="removed"):
+            ops.eva_matmul(x, vq, block_v=None)  # lint-ok (removal test)
 
     def test_grouped_auto_epilogue_matches_per_member_oracles(self):
         """One wide auto-epilogue matmul + split == independent dequant
@@ -178,34 +182,17 @@ class TestResolveErrors:
         x, vq = _mk(80, 70, (), 2)
         return ops.eva_matmul(x, vq, **kw)
 
-    def test_flat_gather_with_block_v_is_loud(self):
-        # used to silently drop flat_gather
-        with pytest.raises(ValueError, match="flat_gather.*block_v"):
-            self._call(flat_gather=True, block_v=8)
-
     def test_block_v_with_non_blocked_epilogue(self):
         for epi in ("direct", "flat", "auto"):
             with pytest.raises(ValueError, match="block_v"):
                 self._call(epilogue=epi, block_v=8)
 
-    def test_flat_gather_with_other_epilogue(self):
-        with pytest.raises(ValueError, match="flat_gather"):
-            self._call(epilogue="blocked", flat_gather=True)
-
-    def test_none_block_v_with_non_direct_epilogue(self):
-        # block_v=None (legacy direct) conflicts with every explicitly
-        # requested non-direct epilogue — including "auto", which would
-        # otherwise silently drop it
-        for epi in ("blocked", "recon", "auto", "flat"):
-            with pytest.raises(ValueError, match="contradictory"):
-                self._call(epilogue=epi, block_v=None)
-        # ...and is consistent with an explicit direct request
-        x, vq = _mk(80, 70, (), 2)
-        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
-        got = ops.eva_matmul(x, vq, epilogue="direct", block_v=None,
-                             out_dtype=jnp.float32)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                                   rtol=2e-4, atol=2e-4)
+    def test_none_block_v_always_raises(self):
+        # the legacy "None means direct" spelling is removed for EVERY
+        # epilogue — including an explicit direct request
+        for epi in ("blocked", "recon", "auto", "flat", "direct", None):
+            with pytest.raises(ValueError, match="removed"):
+                self._call(epilogue=epi, block_v=None)  # lint-ok
 
     def test_unknown_epilogue(self):
         with pytest.raises(ValueError, match="unknown epilogue"):

@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import ops as core_ops
+from repro.core.plan import PlanPolicy
 from repro.core.vq import (
     VQWeight, dequantize, fit_vq, split_grouped, synthetic_vq, vq_specs,
 )
@@ -237,7 +238,8 @@ class TestGroupedNewFamilies:
         assert pg["wqkv"]["vq"].splits == (128, 128, 128)
         ps = self._ungroup(pg, "wqkv", ("wq", "wk", "wv"))
         x = jax.random.normal(KEY, (2, 3, cfg.d_model), jnp.float32)
-        rc = RunConfig(mode="decode", vq_mode="eva", remat=False)
+        rc = RunConfig(mode="decode", remat=False,
+                       plan_policy=PlanPolicy(vq_mode="eva"))
         yg, _ = xlstm.mlstm_block_fwd(pg, x, rc, cfg)
         ys, _ = xlstm.mlstm_block_fwd(ps, x, rc, cfg)
         np.testing.assert_allclose(np.asarray(yg), np.asarray(ys),
@@ -257,8 +259,8 @@ class TestGroupedNewFamilies:
         ps = self._ungroup(pg, "wq_kva", ("wq", "wkv_a"))
         x = jax.random.normal(KEY, (2, 3, cfg.d_model), jnp.float32)
         pos = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32)[None], (2, 3))
-        rc = RunConfig(mode="prefill", vq_mode="eva", remat=False,
-                       attn_chunk=8)
+        rc = RunConfig(mode="prefill", remat=False, attn_chunk=8,
+                       plan_policy=PlanPolicy(vq_mode="eva"))
         yg, _ = mla_fwd(pg, x, rc, cfg, positions=pos)
         ys, _ = mla_fwd(ps, x, rc, cfg, positions=pos)
         np.testing.assert_allclose(np.asarray(yg), np.asarray(ys),
@@ -284,10 +286,12 @@ class TestGroupedModelDecode:
         pos = jnp.zeros((2, 1), jnp.int32)
         l_eva, _ = model.decode(
             q, tok, pos, caches,
-            RunConfig(mode="decode", vq_mode="eva", remat=False))
+            RunConfig(mode="decode", remat=False,
+                      plan_policy=PlanPolicy(vq_mode="eva")))
         l_deq, _ = model.decode(
             q, tok, pos, caches,
-            RunConfig(mode="decode", vq_mode="dequant", remat=False))
+            RunConfig(mode="decode", remat=False,
+                      plan_policy=PlanPolicy(vq_mode="dequant")))
         np.testing.assert_allclose(np.asarray(l_eva), np.asarray(l_deq),
                                    rtol=1e-4, atol=1e-4)
 
@@ -309,10 +313,12 @@ class TestGroupedModelDecode:
         pos = jnp.zeros((1, 1), jnp.int32)
         l_jnp, _ = model.decode(
             q, tok, pos, caches,
-            RunConfig(mode="decode", vq_mode="eva", remat=False))
+            RunConfig(mode="decode", remat=False,
+                      plan_policy=PlanPolicy(vq_mode="eva")))
         l_pal, _ = model.decode(
             q, tok, pos, caches,
-            RunConfig(mode="decode", vq_mode="eva", impl="pallas",
-                      interpret=True, remat=False))
+            RunConfig(mode="decode", remat=False,
+                      plan_policy=PlanPolicy(vq_mode="eva", impl="pallas",
+                                             interpret=True)))
         np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pal),
                                    rtol=1e-4, atol=1e-4)

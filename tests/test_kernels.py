@@ -30,8 +30,8 @@ SHAPE_SWEEP = [
 DTYPE_SWEEP = [jnp.float32, jnp.bfloat16]
 
 
-def _mk(K, N, M, d, n, C, dtype):
-    vq = synthetic_vq(KEY, K, N, d=d, n=n, C=C)
+def _mk(K, N, M, d, n, C, dtype, splits=()):
+    vq = synthetic_vq(KEY, K, N, d=d, n=n, C=C, splits=splits)
     x = jax.random.normal(jax.random.fold_in(KEY, K * N + M), (M, K), dtype)
     return x, vq
 
@@ -141,3 +141,19 @@ def test_eva_matmul_pallas_dispatch():
     ref = core_ops.eva_matmul(x, vq, impl="jnp")
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_eva_split_matmul_two_kernel_pipeline():
+    """The no-fusion formulation — vq_gemm materializes the OC buffer,
+    oc_lookup gathers from it — equals the dequant oracle, including a
+    grouped family (wider N in the lookup stage only) and odd V/N that
+    pad against the kernel tiles."""
+    from repro.kernels.oc_lookup.ops import eva_split_matmul
+
+    for K, N, splits, M in ((128, 96, (), 2), (80, 70, (), 3),
+                            (96, 96, (50, 26, 20), 1)):
+        x, vq = _mk(K, N, M, 8, 8, 2, jnp.float32, splits=splits)
+        got = eva_split_matmul(x, vq, interpret=True, out_dtype=jnp.float32)
+        ref = core_ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)

@@ -168,7 +168,8 @@ class TestContradictoryPolicies:
                                    rtol=2e-4, atol=2e-4)
         from repro.models.common import RunConfig
 
-        rc = RunConfig(mode="decode", vq_mode="dequant", epilogue_block_v=8)
+        rc = RunConfig(mode="decode",
+                       plan_policy=PlanPolicy(vq_mode="dequant", block_v=8))
         assert rc.policy.block_v == 8
 
     def test_pallas_rejects_jnp_epilogues_at_plan_time(self):
@@ -177,34 +178,210 @@ class TestContradictoryPolicies:
             plan_mod.plan_vq(x, vq, PlanPolicy(
                 vq_mode="eva", impl="pallas", epilogue="flat"))
 
-    def test_runconfig_rejects_contradictory_legacy_knobs(self):
+    def test_runconfig_flat_knobs_are_removed(self):
+        """The PR-3 shim cycle is over: the flat execution knobs are no
+        longer RunConfig fields — they raise TypeError at construction
+        instead of silently building a policy."""
         from repro.models.common import RunConfig
 
-        with pytest.raises(ValueError, match="block_v"):
-            RunConfig(epilogue="direct", epilogue_block_v=8)
-        with pytest.raises(ValueError, match="plan_policy"):
-            RunConfig(plan_policy=PlanPolicy(vq_mode="eva"),
-                      vq_mode="dequant")
+        for bad in (dict(vq_mode="eva"), dict(impl="pallas"),
+                    dict(int8_prefill=True), dict(interpret=True),
+                    dict(epilogue="flat"), dict(epilogue_block_v=8)):  # lint-ok
+            with pytest.raises(TypeError):
+                RunConfig(mode="decode", **bad)  # lint-ok (removal test)
+        rc = RunConfig(mode="decode")
+        assert not hasattr(rc, "vq_mode") and not hasattr(rc, "impl")
+        assert rc.policy == PlanPolicy()
 
-    def test_runconfig_legacy_knobs_build_policy(self):
+    def test_runconfig_replace_policy(self):
         from repro.models.common import RunConfig
 
-        rc = RunConfig(mode="decode", vq_mode="eva", impl="pallas",
-                       interpret=True)
-        assert rc.policy == PlanPolicy(vq_mode="eva", impl="pallas",
-                                       interpret=True)
-        rc2 = rc.replace(vq_mode="dequant")
+        rc = RunConfig(mode="decode", plan_policy=PlanPolicy(
+            vq_mode="eva", impl="pallas", interpret=True))
+        rc2 = rc.replace_policy(vq_mode="dequant")
         assert rc2.policy.vq_mode == "dequant"
         assert rc2.policy.impl == "pallas"  # untouched knobs survive
-        # replacing the policy wholesale wins over stale legacy mirrors
         rc3 = rc2.replace(plan_policy=PlanPolicy(vq_mode="eva"))
         assert rc3.policy == PlanPolicy(vq_mode="eva")
-        assert rc3.vq_mode == "eva" and rc3.impl == "jnp"
+
+
+class TestRankedSelection:
+    """Tentpole: the Planner collects every matching backend and picks
+    the cheapest predicted time. impl='pallas' is the genuinely
+    overlapping registration — eva_fused_pallas vs the two-kernel
+    eva_split_pallas — so these tests pin the ranking there, with and
+    without a calibration."""
+
+    PALLAS = PlanPolicy(vq_mode="eva", impl="pallas", interpret=True)
+
+    def _spec(self, x, vq):
+        return LinearSpec.for_vq(vq, M=x.size // vq.K, x_dtype=x.dtype,
+                                 out_dtype=jnp.float32)
+
+    @staticmethod
+    def _entry(overhead, rows=8):
+        from repro.core import calibrate
+
+        return calibrate.BackendCalibration(
+            overhead_us=overhead, us_per_mac=0.0, us_per_add=0.0,
+            us_per_byte=0.0, rows=rows)
+
+    @classmethod
+    def _calib(cls, fused_overhead, split_overhead, rows=8):
+        from repro.core import calibrate
+
+        return calibrate.Calibration(
+            version=calibrate.SCHEMA, source="test",
+            backends={"eva_fused_pallas": cls._entry(fused_overhead, rows),
+                      "eva_split_pallas": cls._entry(split_overhead, rows)})
+
+    def test_analytic_fallback_ranks_fused_first(self):
+        """No calibration: the analytic model prices the split backend's
+        OC round-trip + second launch, so fused wins — deterministically,
+        with both candidates recorded and provenance labeled."""
+        x, vq = _mk(80, 70, (), 2)
+        planner = plan_mod.Planner(calibration=None)
+        pl = planner.plan(self._spec(x, vq), self.PALLAS)
+        assert pl.backend == "eva_fused_pallas"
+        assert pl.provenance == "analytic"
+        assert [b for b, _ in pl.ranking] == ["eva_fused_pallas",
+                                              "eva_split_pallas"]
+        us = [u for _, u in pl.ranking]
+        assert us == sorted(us) and us[0] < us[1]
+        assert "pred=" in pl.describe() and "analytic" in pl.describe()
+        assert "eva_split_pallas" in pl.describe_ranking()
+
+    def test_calibration_flips_choice_to_split(self):
+        """A calibration that prices the fused kernel above the split
+        backend must flip the ranked choice — and the split plan must
+        match the dequant oracle (two kernels, OC buffer in between)."""
+        x, vq = _mk(96, 96, (50, 26, 20), 2)  # grouped family too
+        planner = plan_mod.Planner(calibration=self._calib(1e6, 1.0))
+        pl = planner.plan(self._spec(x, vq), self.PALLAS)
+        assert pl.backend == "eva_split_pallas"
+        assert pl.provenance == "eva-calibration/v1"
+        assert [b for b, _ in pl.ranking] == ["eva_split_pallas",
+                                              "eva_fused_pallas"]
+        got = pl.execute(x, vq)
+        ref = ops.dequant_matmul(x, vq, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_partial_calibration_never_mixes_models(self):
+        """When only ONE of the competing backends has a fitted entry,
+        the ranking must fall back to the analytic model for BOTH —
+        fitted microseconds vs analytic fantasy numbers is not a
+        comparison (a partial CALIBRATION.json must not flip choices)."""
+        from repro.core import calibrate
+
+        x, vq = _mk(80, 70, (), 2)
+        partial = calibrate.Calibration(
+            version=calibrate.SCHEMA, source="partial",
+            backends={"eva_split_pallas": self._entry(1.0)})
+        planner = plan_mod.Planner(calibration=partial)
+        pl = planner.plan(self._spec(x, vq), self.PALLAS)
+        assert pl.backend == "eva_fused_pallas"  # analytic order holds
+        assert pl.provenance == "analytic"
+
+    def test_underfitted_entries_not_trusted_for_ranking(self):
+        """Entries resting on fewer than MIN_FIT_ROWS samples (NNLS with
+        4 free parameters fits 1-3 rows perfectly but arbitrarily) must
+        not drive the ranking."""
+        from repro.core import calibrate
+
+        x, vq = _mk(80, 70, (), 2)
+        thin = self._calib(1e6, 1.0, rows=calibrate.MIN_FIT_ROWS - 1)
+        planner = plan_mod.Planner(calibration=thin)
+        pl = planner.plan(self._spec(x, vq), self.PALLAS)
+        assert pl.backend == "eva_fused_pallas"
+        assert pl.provenance == "analytic"
+
+    def test_choice_is_deterministic_across_planners(self):
+        x, vq = _mk(80, 70, (), 1)
+        for calib in (None, self._calib(10.0, 1e6), self._calib(1e6, 10.0)):
+            a = plan_mod.Planner(calibration=calib)
+            b = plan_mod.Planner(calibration=calib)
+            pa = a.plan(self._spec(x, vq), self.PALLAS)
+            pb = b.plan(self._spec(x, vq), self.PALLAS)
+            assert pa.backend == pb.backend
+            assert pa.ranking == pb.ranking
+
+    def test_cache_identity_unchanged_under_calibration_reload(self):
+        """Reloading calibration swaps the cost model for FUTURE misses
+        only: a cached (spec, policy) keeps returning the SAME plan
+        object, so traced programs and cache stats stay coherent."""
+        x, vq = _mk(80, 70, (), 2)
+        planner = plan_mod.Planner(calibration=None)
+        spec = self._spec(x, vq)
+        p1 = planner.plan(spec, self.PALLAS)
+        assert p1.backend == "eva_fused_pallas"
+        planner.reload_calibration(self._calib(1e6, 1.0))
+        assert planner.plan(spec, self.PALLAS) is p1  # identity preserved
+        hits = planner.cache_info().hits
+        assert hits >= 1
+        # a NEW spec planned after the reload uses the new constants
+        x2, vq2 = _mk(88, 132, (), 2)
+        p2 = planner.plan(self._spec(x2, vq2), self.PALLAS)
+        assert p2.backend == "eva_split_pallas"
+        # clearing the cache re-ranks the original spec under the reload
+        planner.cache_clear()
+        assert planner.plan(spec, self.PALLAS).backend == "eva_split_pallas"
+
+    def test_split_plan_freezes_two_kernel_tiles(self):
+        x, vq = _mk(256, 512, (), 1)
+        planner = plan_mod.Planner(calibration=self._calib(1e6, 1.0))
+        pl = planner.plan(self._spec(x, vq), self.PALLAS)
+        cfg = pl.config_dict
+        assert set(cfg) == {"bmv", "bv", "bn"}
+        assert pl.cost.launches == 2
+        # the HBM OC round-trip is priced: write + read of (C, M, V, 2^n)
+        assert pl.cost.intermediate_bytes == 2 * 4 * vq.C * 1 * vq.V * 256
+
+    def test_single_candidate_sites_report_no_ranking(self):
+        x, vq = _mk(80, 70, (), 1)
+        pl = plan_mod.plan_vq(x, vq, PlanPolicy(vq_mode="eva"))
+        assert len(pl.ranking) == 1 and pl.describe_ranking() == ""
+        assert pl.predicted_us is not None
+
+    def test_first_match_backend_reports_registration_order(self):
+        x, vq = _mk(80, 70, (), 1)
+        spec = self._spec(x, vq)
+        # registration order: fused_vq_matmul.ops imports before
+        # oc_lookup.ops in _KERNEL_BACKEND_MODULES
+        assert plan_mod.first_match_backend(spec, self.PALLAS) == \
+            "eva_fused_pallas"
+        assert plan_mod.first_match_backend(
+            spec, PlanPolicy(vq_mode="eva")) == "eva_direct"
+
+    def test_engine_logs_predicted_time_ranking(self, caplog):
+        """serve/engine.py pre-plan logs surface the ranking when >1
+        backend was eligible (the pallas decode policy)."""
+        import dataclasses as dc
+        import logging
+
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.models.common import RunConfig
+        from repro.serve import Engine, EngineConfig
+
+        cfg = dc.replace(get_smoke_config("llama2_7b"), dtype="float32")
+        model = build_model(cfg)
+        params = model.quantize(model.init(KEY), method="synthetic", key=KEY)
+        rc = RunConfig(mode="decode", remat=False, attn_chunk=16,
+                       plan_policy=PlanPolicy(vq_mode="eva", impl="pallas",
+                                              interpret=True))
+        with caplog.at_level(logging.INFO, logger="repro.serve.engine"):
+            Engine(model, params, rc, EngineConfig(num_slots=2, max_len=16))
+        ranking_lines = [r.message for r in caplog.records
+                         if "ranking" in r.message]
+        assert ranking_lines
+        assert any("eva_split_pallas" in m and "eva_fused_pallas" in m
+                   for m in ranking_lines)
 
 
 class TestDequantPallasReachable:
     """Satellite bugfix: vq_matmul(mode='dequant') used to silently drop
-    impl/interpret, so RunConfig(impl='pallas', vq_mode='dequant') never
+    impl/interpret, so a pallas+dequant RunConfig policy never
     reached the dequant_gemv kernel from model layers."""
 
     def test_model_layer_routes_to_dequant_pallas(self):

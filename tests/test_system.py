@@ -60,7 +60,7 @@ def test_quantize_then_serve_trained_model(tmp_path):
     batch = {k: jnp.asarray(v) for k, v in global_batch_at(dcfg, 99).items()}
     dense_loss = float(model.loss(params, batch, rc))
     vq_loss = float(model.loss(
-        qparams, batch, rc.replace(vq_mode="eva")))
+        qparams, batch, rc.replace_policy(vq_mode="eva")))
     # C=2 (2-bit) quantization degrades, but the model must stay usable
     # (paper Tbl. V: VQ keeps 2-bit models functional where RTN collapses)
     assert np.isfinite(vq_loss)
