@@ -70,7 +70,7 @@ def write_json(path: str, rows: List[Dict[str, Any]],
 def main(argv: Optional[Sequence[str]] = None) -> None:
     from benchmarks import (
         fig8_dse, fig10_decode, fig11_batch, fig12_e2e, fig14_spurious,
-        measured, smoke, tbl_iii_vq_configs, tbl_v_accuracy_proxy,
+        measured, serve, smoke, tbl_iii_vq_configs, tbl_v_accuracy_proxy,
         tbl_viii_throughput, tbl_x_oc_advantage,
     )
 
@@ -85,6 +85,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         ("tbl_x", tbl_x_oc_advantage),
         ("tbl_v", tbl_v_accuracy_proxy),
         ("measured", measured),
+        ("serve", serve),
     ]
     known = {name for name, _ in modules} | {"smoke"}
     # tiny-shape CI smoke: only when named explicitly (not part of "all")

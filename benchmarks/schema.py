@@ -19,6 +19,9 @@ packages; no jsonschema dependency):
   calibration fields in `derived`:
       plan (str), backend (str),
       macs / lookup_adds / weight_bytes (non-negative numbers)
+  timed rows of the `serve` module (engine throughput traces) must carry
+  the engine totals in `derived`:
+      tokens / tok_per_s / requests (non-negative numbers)
 
 CLI (exit 1 on the first error, listing all of them):
 
@@ -35,6 +38,11 @@ SCHEMA = "eva-bench-rows/v1"
 # modules whose timed rows must be calibration-ready
 CALIBRATED_MODULES = ("measured", "smoke")
 COST_FIELDS = ("macs", "lookup_adds", "weight_bytes")
+
+# serving-engine throughput rows must carry the engine totals so the
+# serving trajectory stays machine-readable across PRs
+SERVE_MODULES = ("serve",)
+SERVE_FIELDS = ("tokens", "tok_per_s", "requests")
 
 
 def _is_num(v: Any) -> bool:
@@ -86,6 +94,14 @@ def validate_rows(doc: Any) -> List[str]:
                 if not _is_num(v) or v < 0:
                     errors.append(
                         f"{where}: calibrated row needs non-negative "
+                        f"derived.{f}, got {v!r}")
+        if row.get("module") in SERVE_MODULES \
+                and not name.endswith("/ERROR"):
+            for f in SERVE_FIELDS:
+                v = derived.get(f)
+                if not _is_num(v) or v < 0:
+                    errors.append(
+                        f"{where}: serve row needs non-negative "
                         f"derived.{f}, got {v!r}")
     return errors
 

@@ -1,8 +1,12 @@
-"""Serving example: continuous batching with EVA-quantized weights.
+"""Serving example: the request-level API with EVA-quantized weights.
 
-Submits a stream of variable-length requests to the engine; prefill runs
-per request (INT8 path), decode runs as one batched EVA step across all
-active slots (the paper's multi-batch weight-tile reuse, Fig. 7(c)).
+Submits a stream of variable-length requests — mixed greedy and sampled
+(temperature/top-k/top-p), each with its own eos — then streams one
+request token-by-token while the engine keeps every slot busy. Prefill
+runs per request at power-of-two bucket lengths (INT8 path), decode runs
+as one batched EVA step across all active slots with sampling and
+stopping INSIDE the jitted step (the paper's multi-batch weight-tile
+reuse, Fig. 7(c)).
 
     PYTHONPATH=src python examples/serve_vq.py --arch mixtral-8x22b
 """
@@ -17,7 +21,8 @@ from repro.configs import get_smoke_config
 from repro.core.plan import PlanPolicy
 from repro.models import build_model
 from repro.models.common import RunConfig
-from repro.serve import Engine, EngineConfig
+from repro.serve import (Engine, EngineConfig, GenerationRequest,
+                         SamplingParams)
 
 
 def main():
@@ -26,10 +31,12 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="per-request stop token id")
     args = ap.parse_args()
 
-    # INFO logging shows the engine's pre-planned prefill/decode matmul
-    # plans (backend + resolved tiles per layer shape) at startup
+    # INFO logging shows the engine's pre-planned per-bucket prefill and
+    # decode matmul plans (backend + resolved tiles per layer shape)
     logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
@@ -42,17 +49,42 @@ def main():
                  EngineConfig(num_slots=args.slots, max_len=64))
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 16)))
-               .astype(np.int32) for _ in range(args.requests)]
-    print(f"serving {len(prompts)} requests on {args.slots} slots "
+    eos_ids = () if args.eos is None else (args.eos,)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(4, 16))).astype(np.int32)
+        sampling = SamplingParams() if i % 2 == 0 else SamplingParams(
+            greedy=False, temperature=0.8, top_k=40, top_p=0.95, seed=i)
+        reqs.append(GenerationRequest(prompt=prompt,
+                                      max_new_tokens=args.max_new,
+                                      sampling=sampling, eos_ids=eos_ids))
+    print(f"serving {len(reqs)} requests on {args.slots} slots "
           f"({cfg.name}, {cfg.vq_C * cfg.vq_n / cfg.vq_d:.0f}-bit VQ)")
     t0 = time.time()
-    results = eng.generate(prompts, args.max_new)
+    uids = [eng.submit(r) for r in reqs]
+
+    # stream the first request token-by-token (the engine advances every
+    # slot along the way), then drain the rest
+    print(f"  streaming request {uids[0]}:", end="", flush=True)
+    for ev in eng.stream(uids[0]):
+        print(f" {ev.token}", end="", flush=True)
+    print()
+    while not eng.idle:
+        eng.step()
     dt = time.time() - t0
-    for uid, toks in list(results.items())[:4]:
-        print(f"  request {uid}: {toks}")
-    total = sum(len(v) for v in results.values())
-    print(f"{total} tokens in {dt:.1f}s ({total/dt:.1f} tok/s on CPU)")
+
+    for uid in uids[:4]:
+        out = eng.output(uid)
+        print(f"  request {uid}: {list(out.tokens)} "
+              f"({out.finish_reason}, queue {out.queue_wait_s*1e3:.0f}ms, "
+              f"prefill {out.prefill_s*1e3:.0f}ms, "
+              f"{out.decode_tokens_per_s:.1f} tok/s)")
+    m = eng.metrics()
+    print(f"{m['tokens_generated']} tokens in {dt:.1f}s "
+          f"({m['tokens_generated']/dt:.1f} tok/s on CPU); "
+          f"occupancy {m['slot_occupancy']:.2f}, "
+          f"decode steps {m['decode_steps']}")
 
 
 if __name__ == "__main__":

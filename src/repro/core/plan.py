@@ -555,6 +555,26 @@ def preplan_params(params: Any, policy: PlanPolicy, *, mode: str, m: int,
     return out
 
 
+def preplan_prefill_buckets(params: Any, policy: PlanPolicy, *,
+                            buckets: Tuple[int, ...], act_dtype,
+                            planner: Optional[Planner] = None,
+                            ) -> Dict[int, List[Tuple[Tuple[str, ...],
+                                                      MatmulPlan]]]:
+    """Plan every linear leaf at EACH prefill length bucket.
+
+    The serving engine pads prompts to power-of-two buckets, so prefill
+    executes at exactly these M values — unlike the old single
+    capacity-bound ``prefill@cap`` estimate, every returned plan is the
+    one the traced prefill step will fetch (regime choices like
+    direct-vs-recon flip with M, so per-bucket planning is not just a
+    warm-up: it is the report of what actually runs per bucket)."""
+    return {
+        m: preplan_params(params, policy, mode="prefill", m=m,
+                          act_dtype=act_dtype, planner=planner)
+        for m in buckets
+    }
+
+
 # ---------------------------------------------------------------------------
 # jnp backend registrations (fp / int8 / dequant / EVA epilogues)
 #

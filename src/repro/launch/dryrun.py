@@ -64,7 +64,8 @@ def fc_param_counts(model: Model) -> Dict[str, float]:
 
 def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
              *, vq_mode: str = "eva", tag: str = "",
-             rc_overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+             rc_overrides: Optional[Dict[str, Any]] = None,
+             serve_step: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     model = build_model(cfg)
     mesh_name = "pod2" if mesh_kind == "multi" else "pod1"
@@ -112,10 +113,18 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
             pol_kw.setdefault("vq_mode", vq_mode)
             rc = RunConfig(mode="decode", remat=False,
                            plan_policy=PlanPolicy(**pol_kw), **ov)
-            lowered = steps_mod.lower_decode_step(model, mesh, specs, rc,
-                                                  quantized=True,
-                                                  vq_mode=vq_mode,
-                                                  quantize_lm_head=q_lm_head)
+            if serve_step:
+                # the FULL serving decode step (in-jit sampling/stopping,
+                # host reads back only (next_tok, done)) — what the
+                # request-level engine actually lowers in production
+                result["serve_step"] = True
+                lowered = steps_mod.lower_serve_decode_step(
+                    model, mesh, specs, rc, quantized=True, vq_mode=vq_mode,
+                    quantize_lm_head=q_lm_head)
+            else:
+                lowered = steps_mod.lower_decode_step(
+                    model, mesh, specs, rc, quantized=True, vq_mode=vq_mode,
+                    quantize_lm_head=q_lm_head)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -137,6 +146,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
         )
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # jax-0.4.37 API drift
+            ca = ca[0] if ca else {}
         result.update({
             "status": "ok",
             "chips": chips,
@@ -178,7 +189,12 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--vq-mode", default="eva", choices=["eva", "dequant"])
     ap.add_argument("--tag", default="")
+    ap.add_argument("--serve-step", action="store_true",
+                    help="lower decode cells as the full serving step "
+                         "(in-jit sampling/stopping; serve/api.py)")
     args = ap.parse_args()
+    if args.serve_step and not args.tag:
+        args.tag = "servestep"  # keep plain-decode cells resumable
 
     archs = [a for a in ARCH_IDS if a != "llama2_7b"] if args.all or not args.arch \
         else [args.arch.replace("-", "_").replace(".", "_")]
@@ -190,7 +206,8 @@ def main():
         for shape in shapes:
             for mk in meshes:
                 r = run_cell(arch, shape, mk, args.out,
-                             vq_mode=args.vq_mode, tag=args.tag)
+                             vq_mode=args.vq_mode, tag=args.tag,
+                             serve_step=args.serve_step)
                 line = (f"{arch:24s} {shape:12s} {r['mesh']:5s} "
                         f"{r['status']:8s}")
                 if r["status"] == "ok":

@@ -1,8 +1,9 @@
 """Serving driver: quantize a model to the EVA representation and serve a
-synthetic request stream through the continuous-batching engine.
+synthetic request stream through the request-level continuous-batching
+engine (typed submit/step/stream surface, serve/api.py).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
-        --requests 8 --max-new 16
+        --requests 8 --max-new 16 --sample
 """
 from __future__ import annotations
 
@@ -18,13 +19,18 @@ from repro.configs import get_config, get_smoke_config
 from repro.core.plan import PlanPolicy
 from repro.models.api import build_model
 from repro.models.common import RunConfig
-from repro.serve import Engine, EngineConfig
+from repro.serve import Engine, EngineConfig, GenerationRequest, SamplingParams
 
 
 def serve(arch: str = "llama2-7b", *, smoke: bool = True, requests: int = 8,
           max_new: int = 16, prompt_len: int = 12, num_slots: int = 4,
           vq_mode: str = "eva", quantize: bool = True,
-          impl: str = "jnp", seed: int = 0) -> Dict[str, Any]:
+          impl: str = "jnp", seed: int = 0,
+          sample: bool = False, temperature: float = 0.8, top_k: int = 40,
+          top_p: float = 0.95, eos: Any = None) -> Dict[str, Any]:
+    """Drive a synthetic trace through the engine. ``sample=True`` mixes
+    sampled requests (temperature/top_k/top_p, per-request seeds) among
+    the greedy ones; ``eos`` adds a per-request stop token."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -45,14 +51,29 @@ def serve(arch: str = "llama2-7b", *, smoke: bool = True, requests: int = 8,
             jax.random.normal(key, (8, cfg.d_model), jnp.float32))
     eng = Engine(model, params, rc, ecfg, extras=extras)
     rng = np.random.default_rng(seed)
-    prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, prompt_len + 1))
-               for _ in range(requests)]
+    eos_ids = () if eos is None else (int(eos),)
+    reqs = []
+    for i in range(requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              rng.integers(4, prompt_len + 1))
+        sp = SamplingParams() if not sample or i % 2 == 0 else SamplingParams(
+            greedy=False, temperature=temperature, top_k=top_k, top_p=top_p,
+            seed=i)
+        reqs.append(GenerationRequest(prompt=prompt, max_new_tokens=max_new,
+                                      sampling=sp, eos_ids=eos_ids))
     t0 = time.time()
-    results = eng.generate(prompts, max_new)
+    uids = [eng.submit(r) for r in reqs]
+    events = []
+    while not eng.idle:
+        events.extend(eng.step())
     dt = time.time() - t0
+    results = {u: list(eng.output(u).tokens) for u in uids}
     total_tokens = sum(len(v) for v in results.values())
     return {
         "results": results,
+        "outputs": {u: eng.output(u) for u in uids},
+        "events": events,
+        "metrics": eng.metrics(),
         "wall_s": dt,
         "tokens": total_tokens,
         "tok_per_s": total_tokens / max(dt, 1e-9),
@@ -69,12 +90,22 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--vq-mode", default="eva", choices=["eva", "dequant"])
     ap.add_argument("--no-quantize", dest="quantize", action="store_false")
+    ap.add_argument("--sample", action="store_true",
+                    help="mix sampled requests among the greedy ones")
+    ap.add_argument("--eos", type=int, default=None,
+                    help="per-request stop token id")
     args = ap.parse_args()
     out = serve(args.arch, smoke=args.smoke, requests=args.requests,
                 max_new=args.max_new, num_slots=args.slots,
-                vq_mode=args.vq_mode, quantize=args.quantize)
+                vq_mode=args.vq_mode, quantize=args.quantize,
+                sample=args.sample, eos=args.eos)
+    m = out["metrics"]
     print(f"served {len(out['results'])} requests, {out['tokens']} tokens, "
           f"{out['tok_per_s']:.1f} tok/s")
+    print(f"engine: admitted={m['admitted']} rejected={m['rejected']} "
+          f"finished={m['finished']} (stop={m['finished_stop']} "
+          f"length={m['finished_length']}) decode_steps={m['decode_steps']} "
+          f"occupancy={m['slot_occupancy']:.2f}")
 
 
 if __name__ == "__main__":

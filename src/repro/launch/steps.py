@@ -146,6 +146,50 @@ def make_decode_step(model: Model, rc: RunConfig):
     return decode_step
 
 
+def make_serve_decode_step(model: Model, rc: RunConfig):
+    """The FULL serving decode step as the engine jits it: model decode
+    plus the in-jit per-slot sampling/stopping epilogue
+    (serve/api.sample_and_stop). Dry-runs lowering this step see the true
+    production memory/roofline — logits never leave the device, the host
+    reads back only (next_tok, done_mask)."""
+    from repro.serve import api as serve_api
+
+    def serve_decode_step(params, caches, tokens, positions, keys,
+                          temperature, top_k, top_p, greedy, stop_ids,
+                          remaining, active):
+        rc_d = rc.replace(mode="decode")
+        logits, new_caches = model.decode(
+            params, tokens[:, None], positions[:, None], caches, rc_d)
+        logits = logits[:, 0, : model.cfg.vocab_size]
+        tok, done, new_keys = serve_api.sample_and_stop(
+            logits, keys=keys, temperature=temperature, top_k=top_k,
+            top_p=top_p, greedy=greedy, stop_ids=stop_ids,
+            remaining=remaining, active=active)
+        return tok, done, new_keys, new_caches
+
+    return serve_decode_step
+
+
+def serve_state_specs(batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs of the engine's per-slot sampling/stopping state
+    (the extra inputs of ``make_serve_decode_step``)."""
+    from repro.serve import api as serve_api
+
+    sds = jax.ShapeDtypeStruct
+    return {
+        "tokens": sds((batch,), jnp.int32),
+        "positions": sds((batch,), jnp.int32),
+        "keys": sds((batch, 2), jnp.uint32),
+        "temperature": sds((batch,), jnp.float32),
+        "top_k": sds((batch,), jnp.int32),
+        "top_p": sds((batch,), jnp.float32),
+        "greedy": sds((batch,), jnp.bool_),
+        "stop_ids": sds((batch, serve_api.MAX_STOP_IDS), jnp.int32),
+        "remaining": sds((batch,), jnp.int32),
+        "active": sds((batch,), jnp.bool_),
+    }
+
+
 def lower_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
                       rc: Optional[RunConfig] = None, *,
                       quantized: bool = True, vq_mode: str = "eva",
@@ -175,5 +219,42 @@ def lower_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
         )
         lowered = jitted.lower(
             param_specs, specs["tokens"], specs["positions"], specs["caches"]
+        )
+    return lowered
+
+
+def lower_serve_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
+                            rc: Optional[RunConfig] = None, *,
+                            quantized: bool = True, vq_mode: str = "eva",
+                            quantize_lm_head: bool = False):
+    """Lower the full serving decode step (decode + in-jit sampling and
+    stopping). The per-slot state arrays are tiny and replicated; the
+    cache/param shardings match ``lower_decode_step``."""
+    from jax.sharding import NamedSharding
+
+    rc = rc or RunConfig(mode="decode", remat=False,
+                         plan_policy=PlanPolicy(vq_mode=vq_mode))
+    rc = rc.replace_policy(vq_mode=vq_mode if quantized else "none")
+    param_specs = model.param_specs(quantized=quantized,
+                                    quantize_lm_head=quantize_lm_head)
+    gb = int(specs["tokens"].shape[0])
+    state = serve_state_specs(gb)
+    step = make_serve_decode_step(model, rc)
+    pspec = shd.param_pspecs(param_specs, mesh)
+    cspec = shd.cache_pspecs(specs["caches"], mesh)
+    repl = NamedSharding(mesh, P())
+    state_order = ("tokens", "positions", "keys", "temperature", "top_k",
+                   "top_p", "greedy", "stop_ids", "remaining", "active")
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                shd.to_named(pspec, mesh),
+                shd.to_named(cspec, mesh),
+            ) + tuple(repl for _ in state_order),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(
+            param_specs, specs["caches"], *[state[k] for k in state_order]
         )
     return lowered

@@ -1,3 +1,6 @@
+from repro.serve.api import (GenerationRequest, RequestOutput, SamplingParams,
+                             StreamEvent)
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.kvcache import pad_prefill_cache, cache_bytes
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.metrics import EngineMetrics
+from repro.serve.scheduler import QueueFull, Scheduler, TrackedRequest

@@ -1,0 +1,275 @@
+"""Typed request-level serving surface.
+
+The paper's deployment shape (§V-C, Fig. 7(c)) is a continuously-batched
+decode loop that keeps slots full so every streamed weight-index tile is
+amortized across requests. This module defines the request-level API that
+loop serves:
+
+  SamplingParams     : per-request decoding strategy (greedy / temperature
+                       + top-k + top-p, seeded).
+  GenerationRequest  : prompt + budget + sampling + stop conditions
+                       (eos_ids / stop_token_ids / max_new_tokens).
+  StreamEvent        : one incremental token (or a rejection), as returned
+                       by ``Engine.step()`` / yielded by ``Engine.stream()``.
+  RequestOutput      : the terminal record — tokens, finish_reason
+                       ("stop" | "length" | "rejected") and per-request
+                       timing (queue wait, prefill latency, decode tok/s).
+
+It also owns the JIT-STABLE sampling/stopping math executed inside the
+batched decode step: every per-request knob is data (a per-slot device
+array), never a static argument, so a mixed-sampling workload traces the
+decode step exactly once. ``sample_tokens`` applies temperature / top-k /
+top-p batched over slots with per-slot PRNG keys; ``sample_and_stop``
+additionally evaluates the per-slot stop sets and budgets so the host
+loop only reads back a ``(next_tok, done_mask)`` pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FINISH_REASONS = ("stop", "length", "rejected")
+
+# width of the per-slot stop-token set device array (eos_ids +
+# stop_token_ids, padded with -1); a request needing more raises at submit
+MAX_STOP_IDS = 8
+
+
+# ---------------------------------------------------------------------------
+# Request-side types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding strategy.
+
+    ``greedy=True`` (the default) is exact argmax decoding — temperature /
+    top_k / top_p / seed are ignored. With ``greedy=False`` the token is
+    drawn from softmax(logits / temperature) restricted to the top_k
+    highest-probability tokens (0 disables) and the top_p nucleus (1.0
+    disables), using a PRNG stream derived from ``seed`` — two requests
+    with equal params and seed draw identical streams regardless of
+    submission order or slot placement."""
+
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.greedy and self.temperature <= 0.0:
+            raise ValueError(
+                f"temperature must be > 0 when sampling, got {self.temperature}")
+        if isinstance(self.top_k, bool) or not isinstance(self.top_k, int) \
+                or self.top_k < 0:
+            raise ValueError(f"top_k must be an int >= 0, got {self.top_k!r}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GenerationRequest:
+    """One generation request: prompt, budget, sampling and stop control.
+
+    ``eos_ids`` and ``stop_token_ids`` both terminate the request with
+    ``finish_reason="stop"`` the step the token is EMITTED (the stop token
+    is included in the output); exhausting ``max_new_tokens`` finishes
+    with ``finish_reason="length"``."""
+
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    sampling: SamplingParams = GREEDY
+    eos_ids: Tuple[int, ...] = ()
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("prompt must contain at least one token")
+        object.__setattr__(self, "prompt", prompt)
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        object.__setattr__(self, "eos_ids", tuple(int(t) for t in self.eos_ids))
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def stop_set(self) -> frozenset:
+        return frozenset(self.eos_ids) | frozenset(self.stop_token_ids)
+
+
+# ---------------------------------------------------------------------------
+# Output-side types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One incremental engine event for a request.
+
+    A token event carries the emitted ``token`` and its 0-based ``index``
+    in the generated stream; the terminal event of a request additionally
+    sets ``finish_reason``. A rejected submission produces a single
+    tokenless terminal event (token=None, index=-1)."""
+
+    uid: int
+    index: int
+    token: Optional[int]
+    finish_reason: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Terminal record of a request: everything generated plus timing.
+
+    ``queue_wait_s``  : submit -> prefill start.
+    ``prefill_s``     : wall time of the (bucketed) prefill call.
+    ``decode_s``      : wall time from first decode step to finish.
+    ``decode_tokens_per_s`` derives from the decode-phase tokens (the
+    first token comes out of prefill)."""
+
+    uid: int
+    tokens: Tuple[int, ...]
+    finish_reason: str
+    queue_wait_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    def __post_init__(self):
+        if self.finish_reason not in FINISH_REASONS:
+            raise ValueError(
+                f"finish_reason must be one of {FINISH_REASONS}, "
+                f"got {self.finish_reason!r}")
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        decode_tokens = max(len(self.tokens) - 1, 0)
+        if decode_tokens == 0 or self.decode_s <= 0.0:
+            return 0.0
+        return decode_tokens / self.decode_s
+
+
+# ---------------------------------------------------------------------------
+# Prefill length bucketing
+# ---------------------------------------------------------------------------
+
+
+def prefill_buckets(max_len: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets up to (and always including)
+    ``max_len``. Prefill pads each prompt to its bucket, so the jitted
+    prefill step retraces at most once per bucket instead of once per
+    distinct prompt length."""
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    out: List[int] = []
+    b = min(min_bucket, max_len)
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def bucket_for(prompt_len: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket holding ``prompt_len``."""
+    for b in buckets:
+        if prompt_len <= b:
+            return b
+    raise ValueError(
+        f"prompt length {prompt_len} exceeds the largest bucket {buckets[-1]}")
+
+
+# ---------------------------------------------------------------------------
+# In-jit batched sampling / stopping
+# ---------------------------------------------------------------------------
+
+
+def _top_k_top_p_mask(scaled: jax.Array, top_k: jax.Array,
+                      top_p: jax.Array) -> jax.Array:
+    """Keep-mask over temperature-scaled logits (B, V) under per-row top_k
+    (0 = disabled) and top_p (1.0 = disabled). Jit-stable: k and p are
+    data, the mask is computed from the full sort."""
+    V = scaled.shape[-1]
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+    kth = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    keep = scaled >= kth
+    # nucleus: smallest prefix of the sorted distribution reaching top_p
+    # (the first token is always kept)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_sorted = (cum - probs) < top_p[:, None]
+    thr = jnp.min(jnp.where(keep_sorted, sorted_desc, jnp.inf), axis=-1)
+    keep &= scaled >= thr[:, None]
+    return keep
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array, greedy: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Batched per-slot token sampling.
+
+    logits (B, V) float; keys (B, 2) uint32 raw PRNG keys; temperature
+    (B,) f32; top_k (B,) i32; top_p (B,) f32; greedy (B,) bool. Returns
+    (tokens (B,) i32, advanced keys (B, 2)). Greedy rows take the exact
+    argmax of the unscaled logits (bit-identical to the pre-redesign
+    host argmax); sampled rows draw from the masked scaled distribution.
+    Keys advance for every row every step, so a slot's stream depends
+    only on its seed and step count — not on its neighbors."""
+    lf = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    temp = jnp.maximum(temperature.astype(jnp.float32), 1e-6)[:, None]
+    scaled = lf / temp
+    keep = _top_k_top_p_mask(scaled, top_k, top_p)
+    masked = jnp.where(keep, scaled, -jnp.inf)
+
+    def one(key, row):
+        k_next, k_use = jax.random.split(key)
+        return jax.random.categorical(k_use, row).astype(jnp.int32), k_next
+
+    sampled, new_keys = jax.vmap(one)(keys, masked)
+    tok = jnp.where(greedy, greedy_tok, sampled)
+    return tok, new_keys
+
+
+def sample_and_stop(logits: jax.Array, *, keys: jax.Array,
+                    temperature: jax.Array, top_k: jax.Array,
+                    top_p: jax.Array, greedy: jax.Array,
+                    stop_ids: jax.Array, remaining: jax.Array,
+                    active: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The serving decode epilogue: sample one token per slot, then
+    evaluate the per-slot stop condition on device.
+
+    stop_ids (B, MAX_STOP) i32 padded with -1; remaining (B,) i32 tokens
+    still allowed including this one; active (B,) bool. Returns
+    (next_tok, done, new_keys): ``done`` is True on the step a slot emits
+    a stop-set token or exhausts its budget — the host never scans
+    generated streams. Inactive lanes emit token 0 and stay not-done."""
+    tok, new_keys = sample_tokens(logits, keys, temperature, top_k, top_p,
+                                  greedy)
+    hit_stop = jnp.any(tok[:, None] == stop_ids, axis=-1)
+    done = active & (hit_stop | (remaining <= 1))
+    return jnp.where(active, tok, 0), done, new_keys

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine.
+"""Event-driven continuous-batching serving engine.
 
 The EVA deployment shape (paper §V-C / Fig. 7(c)): prefill runs per-request
 (INT8 GEMM path), decode runs as one batched step over all active slots so
@@ -6,6 +6,28 @@ every streamed weight-index tile is reused across requests. Slots free up
 as requests finish and queued requests are admitted with a fresh prefill —
 classic continuous batching, expressed with jit-stable shapes (fixed slot
 count, fixed cache capacity).
+
+Request-level surface (serve/api.py types):
+
+  uid = engine.submit(GenerationRequest(...))   # admission-checked
+  events = engine.step()                        # one tick -> StreamEvents
+  for ev in engine.stream(uid): ...             # per-request iterator
+  engine.generate(prompts, n)                   # greedy batch convenience
+  engine.metrics()                              # counters snapshot
+
+Sampling and stopping run INSIDE the jitted decode step with jit-stable
+shapes: per-slot PRNG keys, temperature/top-k/top-p, stop-token sets and
+budgets are all device arrays of fixed (num_slots, ...) shape, so a
+mixed-sampling workload traces the decode step exactly ONCE and the host
+loop only reads back a ``(next_tok, done_mask)`` pair.
+
+Prefill is length-BUCKETED for attention families: prompts right-pad
+(edge mode — the pad value is causally masked) to power-of-two buckets,
+the true length rides along as a traced scalar, and the jitted prefill
+step retraces at most once per bucket instead of once per prompt length.
+Families whose prefill is not padding-invariant (recurrent state
+integrates pad tokens: xlstm/rglru; MoE capacity-drop routing depends on
+the token count: moe) run exact-length prefill instead.
 
 All caches are batched on axis 1 (axis 0 is the scanned layer/group axis),
 so slot insertion is a tree-wide dynamic_update_slice at index b.
@@ -15,7 +37,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
-from typing import Any, Dict, List, Optional
+import time
+from collections import deque
+from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +48,20 @@ import numpy as np
 from repro.core import plan as plan_mod
 from repro.models.api import Model
 from repro.models.common import RunConfig
+from repro.serve import api
+from repro.serve.api import (GenerationRequest, RequestOutput, SamplingParams,
+                             StreamEvent)
 from repro.serve.kvcache import pad_prefill_cache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.metrics import EngineMetrics
+from repro.serve.scheduler import QueueFull, Scheduler, TrackedRequest
 
 log = logging.getLogger(__name__)
+
+# families whose prefill output is invariant to causal right-padding
+# (pure-attention stacks); recurrent state (xlstm/rglru) integrates pad
+# tokens and MoE capacity-based routing depends on the total token count,
+# so those families prefill at exact prompt length
+_BUCKETABLE_FAMILIES = ("dense", "whisper", "vision")
 
 
 def _insert_slot(batched: Any, single: Any, b: int) -> Any:
@@ -46,8 +80,13 @@ def _insert_slot(batched: Any, single: Any, b: int) -> Any:
 class EngineConfig:
     num_slots: int = 4
     max_len: int = 256
-    greedy: bool = True
-    eos_id: int = -1              # <0: run to max_new_tokens
+    max_queue: int = 256               # submit() rejects past this bound
+    prefill_bucketing: bool = True     # pad prompts to power-of-two buckets
+    min_prefill_bucket: int = 8
+    # finished RequestOutputs (+ their undrained event buffers) retained
+    # for output()/stream(); oldest evicted past this bound so a
+    # long-running submit()/step() server stays memory-bounded
+    max_retained: int = 1024
 
 
 class Engine:
@@ -58,28 +97,63 @@ class Engine:
         self.rc = rc
         self.ecfg = ecfg
         self.extras = extras or {}
-        self.sched = Scheduler(ecfg.num_slots)
+        self.sched = Scheduler(ecfg.num_slots, max_queue=ecfg.max_queue)
         cfg = model.cfg
         self.window = cfg.sliding_window or cfg.local_window
         self.caches = model.init_cache(ecfg.num_slots, ecfg.max_len)
-        self.positions = np.zeros((ecfg.num_slots,), np.int64)
-        self.last_token = np.zeros((ecfg.num_slots,), np.int64)
+        self.metrics_counters = EngineMetrics(num_slots=ecfg.num_slots)
 
-        # Plan once at slot capacity. The decode entries are exact: the
-        # batched step always runs at M = num_slots tokens in flight, so
-        # this warms the Planner cache before the first trace (the traced
-        # step then only hits it). The prefill entries are capacity-bound
-        # ESTIMATES at M = max_len — real prefills trace at the prompt
-        # length and plan on demand (regime choices like direct-vs-recon
-        # flip with M) — logged for introspection, labeled as such.
+        B = ecfg.num_slots
+        # per-slot decode state: every per-request sampling/stopping knob
+        # is DATA of fixed shape, so the jitted decode step traces once
+        self.positions = np.zeros((B,), np.int32)
+        self.last_token = np.zeros((B,), np.int32)
+        self.rng_keys = np.zeros((B, 2), np.uint32)
+        self.temperature = np.ones((B,), np.float32)
+        self.top_k = np.zeros((B,), np.int32)
+        self.top_p = np.ones((B,), np.float32)
+        self.greedy = np.ones((B,), bool)
+        self.stop_ids = np.full((B, api.MAX_STOP_IDS), -1, np.int32)
+        self.remaining = np.zeros((B,), np.int32)
+        self.active = np.zeros((B,), bool)
+
+        # request-level bookkeeping; _retired drives FIFO eviction of
+        # finished outputs/buffers past ecfg.max_retained
+        self._outputs: Dict[int, RequestOutput] = {}
+        self._buffers: Dict[int, Deque[StreamEvent]] = {}
+        self._pending: List[StreamEvent] = []
+        self._retired: Deque[int] = deque()
+
+        # trace-counting harness: these tick only when jax (re)traces the
+        # python body — tests pin decode==1 and prefill<=len(buckets)
+        self.trace_counts = {"decode": 0, "prefill": 0}
+
+        self._bucketed = (ecfg.prefill_bucketing
+                          and cfg.family in _BUCKETABLE_FAMILIES)
+        self._buckets = (api.prefill_buckets(ecfg.max_len,
+                                             ecfg.min_prefill_bucket)
+                         if self._bucketed else ())
+
+        # Pre-plan at the exact execution shapes. Decode always runs at
+        # M = num_slots tokens in flight; bucketed prefill runs at exactly
+        # the bucket lengths — both warm the Planner cache before the
+        # first trace (the traced steps then only hit it). Unbucketed
+        # families keep the capacity-bound estimate for introspection.
         self.plans: Dict[str, Any] = {
             "decode": plan_mod.preplan_params(
                 params, rc.policy, mode="decode", m=ecfg.num_slots,
                 act_dtype=cfg.act_dtype),
-            "prefill@cap": plan_mod.preplan_params(
-                params, rc.policy, mode="prefill", m=ecfg.max_len,
-                act_dtype=cfg.act_dtype),
         }
+        if self._bucketed:
+            per_bucket = plan_mod.preplan_prefill_buckets(
+                params, rc.policy, buckets=self._buckets,
+                act_dtype=cfg.act_dtype)
+            for m, plans in per_bucket.items():
+                self.plans[f"prefill@{m}"] = plans
+        else:
+            self.plans["prefill@cap"] = plan_mod.preplan_params(
+                params, rc.policy, mode="prefill", m=ecfg.max_len,
+                act_dtype=cfg.act_dtype)
         for phase, plans in self.plans.items():
             uniq: Dict[str, int] = {}
             rankings: Dict[str, int] = {}
@@ -96,88 +170,342 @@ class Engine:
         self._decode_fn = jax.jit(
             functools.partial(self._decode_impl, rc=rc.replace(mode="decode")),
         )
+        self._prefill_fn = jax.jit(
+            functools.partial(self._prefill_impl,
+                              rc=self.rc.replace(mode="prefill")),
+        )
+        # prefill extras (whisper frames / vision embeds), batched once
+        self._extra_batch = {
+            k: (v[None] if getattr(v, "ndim", 0) == 2 else v[:1])
+            for k, v in self.extras.items()
+        }
+
+    # ------------------------------------------------------------ admission
+    def _admission_error(self, request: GenerationRequest) -> Optional[str]:
+        """Why this request can never be served on this engine (None when
+        servable). Windowed caches wrap by design, so only the prompt must
+        fit; full caches also need room for every decode write (positions
+        prompt_len .. prompt_len + max_new_tokens - 2) — past capacity the
+        write slot clamps and silently corrupts the newest KV entry."""
+        if request.prompt_len > self.ecfg.max_len:
+            return (f"prompt length {request.prompt_len} exceeds max_len "
+                    f"{self.ecfg.max_len}")
+        need = request.prompt_len + request.max_new_tokens - 1
+        if self.window == 0 and need > self.ecfg.max_len:
+            return (f"prompt_len + max_new_tokens - 1 = {need} exceeds the "
+                    f"cache capacity max_len={self.ecfg.max_len}")
+        return None
+
+    def submit(self, request: GenerationRequest) -> int:
+        """Admission-checked submit. Unservable requests (over-long
+        prompt, decode budget past cache capacity) and a full queue
+        reject IMMEDIATELY with a clean terminal
+        ``RequestOutput(finish_reason="rejected")`` — no prefill compute
+        is spent and no deep shape error or silent cache clamp happens
+        later."""
+        if not isinstance(request, GenerationRequest):
+            raise TypeError(
+                f"submit() takes a GenerationRequest, got "
+                f"{type(request).__name__}; use Engine.generate() for the "
+                "prompt-list convenience path")
+        if len(request.stop_set) > api.MAX_STOP_IDS:
+            raise ValueError(
+                f"request has {len(request.stop_set)} stop ids; the engine "
+                f"supports at most {api.MAX_STOP_IDS} (api.MAX_STOP_IDS)")
+        self.metrics_counters.submitted += 1
+        why = self._admission_error(request)
+        if why is not None:
+            return self._reject(request, why)
+        try:
+            uid = self.sched.submit(request)
+        except QueueFull as e:
+            return self._reject(request, str(e))
+        self._buffers[uid] = deque()
+        return uid
+
+    def _reject(self, request: GenerationRequest, why: str) -> int:
+        uid = self.sched.next_uid()
+        log.info("request %d rejected: %s", uid, why)
+        self.metrics_counters.rejected += 1
+        out = RequestOutput(uid=uid, tokens=(), finish_reason="rejected")
+        self._outputs[uid] = out
+        # the terminal event is delivered (and buffered) by the next step()
+        self._buffers[uid] = deque()
+        self._pending.append(StreamEvent(uid=uid, index=-1, token=None,
+                                         finish_reason="rejected"))
+        self._retain(uid)
+        return uid
+
+    def _retain(self, uid: int) -> None:
+        """FIFO-bound the finished outputs + undrained event buffers: a
+        long-running submit()/step() server that never reads them must
+        not grow memory linearly in total requests served."""
+        self._retired.append(uid)
+        while len(self._retired) > self.ecfg.max_retained:
+            old = self._retired.popleft()
+            self._outputs.pop(old, None)
+            self._buffers.pop(old, None)
 
     # ------------------------------------------------------------- prefill
-    def _prefill_one(self, slot: int, req: Request):
-        rc_p = self.rc.replace(mode="prefill")
-        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-        for k, v in self.extras.items():
-            batch[k] = v[None] if v.ndim == 2 else v[:1]
-        logits, cache = self.model.prefill(self.params, batch, rc_p)
-        cache = pad_prefill_cache(
-            cache, self.ecfg.max_len, window=self.window
+    def _prefill_impl(self, params, tokens, true_len, key, temperature,
+                      top_k, top_p, greedy, extras, *, rc):
+        """Jitted per-request prefill: forward at the (bucket-)padded
+        length, sample the first token from the logits at the TRUE last
+        position, and convert the cache to decode capacity — all on
+        device, one trace per bucket."""
+        self.trace_counts["prefill"] += 1
+        batch = {"tokens": tokens}
+        batch.update(extras)
+        logits, cache = self.model.prefill(params, batch, rc)
+        last = jax.lax.dynamic_slice_in_dim(
+            logits[0], true_len - 1, 1, axis=0)[0]
+        last = last[: self.model.cfg.vocab_size][None]          # (1, V)
+        tok, new_key = api.sample_tokens(
+            last, key[None], temperature[None], top_k[None], top_p[None],
+            greedy[None])
+        cache = pad_prefill_cache(cache, self.ecfg.max_len,
+                                  window=self.window, true_len=true_len)
+        return tok[0], new_key[0], cache
+
+    def _prefill_one(self, slot: int, tr: TrackedRequest) -> int:
+        req = tr.request
+        sp = req.sampling
+        L = req.prompt_len
+        prompt = req.prompt
+        if self._bucketed:
+            bucket = api.bucket_for(L, self._buckets)
+            if bucket > L:
+                # edge-pad: the value is causally masked for real rows,
+                # and repeating the last token keeps stub models (that
+                # read tokens[:, -1]) meaningful in tests
+                prompt = np.pad(prompt, (0, bucket - L), mode="edge")
+        key = jax.random.PRNGKey(sp.seed)
+        tok, new_key, cache = self._prefill_fn(
+            self.params, jnp.asarray(prompt[None], jnp.int32),
+            jnp.asarray(L, jnp.int32), jnp.asarray(key),
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32),
+            jnp.asarray(sp.top_p, jnp.float32),
+            jnp.asarray(sp.greedy), self._extra_batch,
         )
         self.caches = _insert_slot(self.caches, cache, slot)
-        tok = int(np.argmax(np.asarray(logits[0, -1])))
-        req.generated.append(tok)
-        self.positions[slot] = req.prompt_len
-        self.last_token[slot] = tok
+        tok = int(tok)
+        tr.generated.append(tok)
 
-    def _stopped(self, req: Request) -> bool:
-        """Stopping condition over the tokens generated so far."""
-        return len(req.generated) >= req.max_new_tokens or (
-            self.ecfg.eos_id >= 0 and bool(req.generated)
-            and req.generated[-1] == self.ecfg.eos_id
-        )
+        # per-slot decode state for this request
+        stop = sorted(req.stop_set)
+        self.positions[slot] = L
+        self.last_token[slot] = tok
+        self.rng_keys[slot] = np.asarray(new_key)
+        self.temperature[slot] = sp.temperature
+        self.top_k[slot] = sp.top_k
+        self.top_p[slot] = sp.top_p
+        self.greedy[slot] = sp.greedy
+        self.stop_ids[slot, :] = -1
+        self.stop_ids[slot, : len(stop)] = stop
+        self.remaining[slot] = req.max_new_tokens - 1
+        self.active[slot] = True
+        return tok
 
     # -------------------------------------------------------------- decode
-    def _decode_impl(self, params, tokens, positions, caches, *, rc):
-        logits, new_caches = self.model.decode(params, tokens, positions, caches, rc)
-        next_tok = jnp.argmax(logits[:, 0, : self.model.cfg.vocab_size], axis=-1)
-        return next_tok, new_caches
+    def _decode_impl(self, params, caches, tokens, positions, keys,
+                     temperature, top_k, top_p, greedy, stop_ids, remaining,
+                     active, *, rc):
+        """Jitted batched decode step: model decode + in-jit per-slot
+        sampling and stopping (serve/api.sample_and_stop). Every
+        per-request knob is a fixed-shape device array -> ONE trace."""
+        self.trace_counts["decode"] += 1
+        logits, new_caches = self.model.decode(
+            params, tokens[:, None], positions[:, None], caches, rc)
+        logits = logits[:, 0, : self.model.cfg.vocab_size]
+        tok, done, new_keys = api.sample_and_stop(
+            logits, keys=keys, temperature=temperature, top_k=top_k,
+            top_p=top_p, greedy=greedy, stop_ids=stop_ids,
+            remaining=remaining, active=active)
+        return tok, done, new_keys, new_caches
 
-    def step(self) -> List[Request]:
-        """One engine tick: admit+prefill new requests, one batched decode
-        step, retire finished requests. Returns finished requests.
+    # ---------------------------------------------------------------- step
+    def step(self) -> List[StreamEvent]:
+        """One engine tick: admit+prefill queued requests, one batched
+        decode step over active slots, retire finished requests. Returns
+        the tick's StreamEvents (prefill tokens, decode tokens, pending
+        rejections).
 
         A request retires in the SAME step its stopping condition is met
-        (eos emitted / max_new_tokens reached) — including straight out of
-        prefill — so it never occupies a slot for an extra batched decode
-        step. Free slots are masked out of the decode inputs (token 0 at
-        position 0) instead of replaying their stale last_token."""
-        finished: List[Request] = []
-        for slot in self.sched.admit():
-            req = self.sched.slots[slot]
-            self._prefill_one(slot, req)
-            # eos in the prefill-sampled token / max_new_tokens == 1:
-            # retire before the request joins a decode batch at all
-            if self._stopped(req):
-                finished.append(self.sched.finish(slot))
+        (stop-set token emitted / budget exhausted) — including straight
+        out of prefill — so it never occupies a slot for an extra batched
+        decode step. Free slots are masked out of the decode inputs
+        (token 0 at position 0) instead of replaying stale state."""
+        m = self.metrics_counters
+        events: List[StreamEvent] = list(self._pending)
+        self._pending.clear()
 
-        active = self.sched.active_slots()
-        if active:
-            mask = np.zeros_like(self.last_token, dtype=bool)
-            mask[active] = True
-            tokens = jnp.asarray(np.where(mask, self.last_token, 0)[:, None],
-                                 jnp.int32)
-            positions = jnp.asarray(np.where(mask, self.positions, 0)[:, None],
-                                    jnp.int32)
-            next_tok, self.caches = self._decode_fn(
-                self.params, tokens, positions, self.caches
+        for slot in self.sched.admit():
+            tr = self.sched.slots[slot]
+            now = time.perf_counter()
+            tr.queue_wait_s = now - tr.submit_t
+            m.admitted += 1
+            m.queue_wait_s += tr.queue_wait_s
+            tok = self._prefill_one(slot, tr)
+            tr.prefill_s = time.perf_counter() - now
+            tr.decode_t0 = time.perf_counter()
+            m.prefills += 1
+            m.prefill_prompt_tokens += tr.prompt_len
+            m.prefill_s += tr.prefill_s
+            m.tokens_generated += 1
+            # stop-set token straight out of prefill / budget of one:
+            # retire before the request joins a decode batch at all
+            reason = None
+            if tok in tr.stop_set:
+                reason = "stop"
+            elif tr.request.max_new_tokens == 1:
+                reason = "length"
+            events.append(StreamEvent(tr.uid, 0, tok, reason))
+            if reason is not None:
+                self._finish_slot(slot, reason)
+
+        active_idx = np.nonzero(self.active)[0]
+        if active_idx.size:
+            t0 = time.perf_counter()
+            tok, done, new_keys, self.caches = self._decode_fn(
+                self.params, self.caches,
+                jnp.asarray(np.where(self.active, self.last_token, 0)),
+                jnp.asarray(np.where(self.active, self.positions, 0)),
+                jnp.asarray(self.rng_keys),
+                jnp.asarray(self.temperature),
+                jnp.asarray(self.top_k),
+                jnp.asarray(self.top_p),
+                jnp.asarray(self.greedy),
+                jnp.asarray(self.stop_ids),
+                jnp.asarray(self.remaining),
+                jnp.asarray(self.active),
             )
-            next_tok = np.asarray(next_tok)
-            for b in active:
-                req = self.sched.slots[b]
-                self.positions[b] += 1
-                req.generated.append(int(next_tok[b]))
-                self.last_token[b] = int(next_tok[b])
-                # retire in the step the stopping condition is met — the
-                # slot is free for admission on the next tick
-                if self._stopped(req):
-                    finished.append(self.sched.finish(b))
-        return finished
+            tok = np.asarray(tok)
+            done = np.asarray(done)
+            # np.array (copy) — np.asarray of a device array is read-only,
+            # and the next prefill writes per-slot keys in place
+            self.rng_keys = np.array(new_keys)
+            m.decode_steps += 1
+            m.decode_slot_steps += int(active_idx.size)
+            m.decode_s += time.perf_counter() - t0
+            m.tokens_generated += int(active_idx.size)
+
+            emitted = self.active.copy()
+            self.positions[emitted] += 1
+            self.remaining[emitted] -= 1
+            self.last_token = np.where(emitted, tok, self.last_token)
+            for b in active_idx:
+                tr = self.sched.slots[b]
+                t = int(tok[b])
+                tr.generated.append(t)
+                idx = len(tr.generated) - 1
+                reason = None
+                if done[b]:
+                    reason = "stop" if t in tr.stop_set else "length"
+                events.append(StreamEvent(tr.uid, idx, t, reason))
+                if reason is not None:
+                    self._finish_slot(int(b), reason)
+
+        for ev in events:
+            buf = self._buffers.get(ev.uid)
+            if buf is not None:
+                buf.append(ev)
+        return events
+
+    def _finish_slot(self, slot: int, reason: str) -> TrackedRequest:
+        tr = self.sched.finish(slot)
+        self.active[slot] = False
+        self.metrics_counters.count_finish(reason)
+        decode_s = (time.perf_counter() - tr.decode_t0
+                    if len(tr.generated) > 1 else 0.0)
+        self._outputs[tr.uid] = RequestOutput(
+            uid=tr.uid, tokens=tuple(tr.generated), finish_reason=reason,
+            queue_wait_s=tr.queue_wait_s, prefill_s=tr.prefill_s,
+            decode_s=decode_s)
+        self._retain(tr.uid)
+        return tr
+
+    # ------------------------------------------------------------ streaming
+    @property
+    def idle(self) -> bool:
+        return self.sched.idle and not self._pending
+
+    def output(self, uid: int) -> Optional[RequestOutput]:
+        """The terminal RequestOutput once ``uid`` finished (else None)."""
+        return self._outputs.get(uid)
+
+    def stream(self, uid: int) -> Iterator[StreamEvent]:
+        """Iterate ``uid``'s StreamEvents, driving ``step()`` as needed;
+        ends after yielding the terminal event. Events for OTHER requests
+        produced along the way stay buffered for their own streams."""
+        buf = self._buffers.get(uid)
+        if buf is None:
+            raise KeyError(f"unknown request uid {uid}")
+        guard = 0
+        while True:
+            while buf:
+                ev = buf.popleft()
+                yield ev
+                if ev.done:
+                    self._buffers.pop(uid, None)
+                    return
+            if self.idle:  # pragma: no cover - defensive
+                raise RuntimeError(
+                    f"engine idle but request {uid} never finished")
+            self.step()
+            guard += 1
+            if guard > 1_000_000:  # pragma: no cover
+                raise RuntimeError("stream() did not converge")
+
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        """Snapshot of the engine counters (serve/metrics.py)."""
+        return self.metrics_counters.snapshot()
 
     # ---------------------------------------------------------- high level
-    def generate(self, prompts: List[np.ndarray], max_new_tokens: int
+    def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
+                 sampling: Optional[SamplingParams] = None
                  ) -> Dict[int, List[int]]:
-        uids = [self.sched.submit(p, max_new_tokens) for p in prompts]
-        results: Dict[int, List[int]] = {}
+        """Convenience wrapper over submit/step: serve a batch of prompts
+        to completion and return {uid: tokens} in submission order. The
+        default sampling is greedy — token-for-token identical to the
+        pre-redesign blocking engine. Rejected prompts raise (the typed
+        submit() surface is the place to handle rejection gracefully)."""
+        sampling = sampling or api.GREEDY
+        reqs = [GenerationRequest(prompt=p, max_new_tokens=max_new_tokens,
+                                  sampling=sampling) for p in prompts]
+        # validate the whole batch BEFORE enqueueing anything: a partial
+        # raise must not leave accepted prompts queued for a later call
+        bad = {i: self._admission_error(r) for i, r in enumerate(reqs)}
+        bad = {i: why for i, why in bad.items() if why is not None}
+        if bad:
+            raise ValueError(
+                f"generate(): unservable prompt(s) {bad}; use submit() to "
+                "handle rejection as data")
         guard = 0
-        while not self.sched.idle:
-            for req in self.step():
-                results[req.uid] = req.generated[:req.max_new_tokens]
+        uids = []
+        for r in reqs:
+            # respect the bounded queue: drain instead of rejecting
+            while len(self.sched.queue) >= self.sched.max_queue:
+                self.step()
+                guard += 1
+                if guard > 100000:  # pragma: no cover
+                    raise RuntimeError("engine did not converge")
+            uids.append(self.submit(r))
+        while not self.idle:
+            self.step()
             guard += 1
             if guard > 100000:  # pragma: no cover
                 raise RuntimeError("engine did not converge")
-        # order results by submission
-        return {u: results[u] for u in uids}
+        results: Dict[int, List[int]] = {}
+        for uid, req in zip(uids, reqs):
+            out = self._outputs[uid]
+            # the stopping condition is enforced in-jit; over-generation
+            # would be an engine bug — assert the invariant rather than
+            # silently truncating it away
+            assert len(out.tokens) <= req.max_new_tokens, (
+                f"request {uid} generated {len(out.tokens)} tokens, over "
+                f"its max_new_tokens={req.max_new_tokens} budget")
+            results[uid] = list(out.tokens)
+            self._buffers.pop(uid, None)
+        return results

@@ -5,6 +5,20 @@ buffers, MLA latent caches, RG-LRU / xLSTM recurrent states). The engine
 needs one operation over all of them: convert the variable-length caches
 returned by prefill into fixed-capacity decode caches.
 
+Bucketed prefill (serve/engine.py) runs this conversion INSIDE the jitted
+prefill step with a traced ``true_len``: the prompt is right-padded to a
+power-of-two bucket, so the prefill cache's static time length is the
+bucket, while the number of REAL positions is dynamic. The conversion
+stays jit-stable (fixed output shapes, dynamic gathers) and the ``len``
+leaves are overwritten with ``true_len``; pad garbage beyond ``true_len``
+is never read — decode overwrites slot ``len`` before attention unmasks
+it (``valid = pos < len``).
+
+Ring caches convert to the DECODE ring size ``min(capacity, window)`` —
+the size ``init_cache`` allocates and decode wraps by (``slot = len %
+S_cache``) — not the raw window, which previously produced oversized
+rings whenever ``window > capacity``.
+
 Conventions (see models/*.init_cache):
   {"k","v","len"}            attention cache, time axis -3 (ring iff window)
   {"latent","k_rope","len"}  MLA cache, time axis -2
@@ -30,39 +44,78 @@ def _pad_time(x: jax.Array, axis: int, capacity: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-def _to_ring(x: jax.Array, axis: int, window: int) -> jax.Array:
-    """Reorder the last `window` positions of a full-length cache into ring
-    order (slot = position % window)."""
+def _to_ring(x: jax.Array, axis: int, ring: int) -> jax.Array:
+    """Reorder the last `ring` positions of a full-length cache into ring
+    order (slot = position % ring)."""
     S = x.shape[axis]
-    if S <= window:
-        return _pad_time(x, axis, window)
-    s = jnp.arange(window)
-    pos = S - window + ((s - (S - window)) % window)
+    if S <= ring:
+        return _pad_time(x, axis, ring)
+    s = jnp.arange(ring)
+    pos = S - ring + ((s - (S - ring)) % ring)
     return jnp.take(x, pos, axis=axis)
 
 
-def pad_prefill_cache(cache: Any, capacity: int, *, window: int = 0) -> Any:
+def _to_ring_dynamic(x: jax.Array, axis: int, ring: int,
+                     true_len: jax.Array) -> jax.Array:
+    """``_to_ring`` with a traced number of real positions: the cache's
+    static time length is the prefill bucket, only the first ``true_len``
+    entries are real. Slots past ``true_len`` hold clipped garbage — the
+    decode attention mask (``pos < len``) hides them until they are
+    overwritten in ring order."""
+    S = x.shape[axis]
+    s = jnp.arange(ring)
+    wrapped = true_len - ring + ((s - true_len) % ring)
+    pos = jnp.where(true_len <= ring, s, wrapped)
+    pos = jnp.clip(pos, 0, S - 1)
+    return jnp.take(x, pos, axis=axis)
+
+
+def pad_prefill_cache(cache: Any, capacity: int, *, window: int = 0,
+                      true_len: Optional[jax.Array] = None) -> Any:
     """Walk the cache tree and pad/ring-convert every attention cache to
     its decode capacity. Recurrent states and static cross memories pass
-    through unchanged."""
+    through unchanged.
+
+    ``true_len`` (a traced int32 scalar) enables the bucketed-prefill
+    path: the cache's static time length is the padded bucket, the ``len``
+    leaves are set to ``true_len`` and ring conversion reorders the last
+    ``true_len`` (not bucket-length) positions."""
     eff_cap = min(capacity, window) if window else capacity
+
+    def fix_time(x, axis):
+        if window:
+            if true_len is None:
+                return _to_ring(x, axis, eff_cap)
+            return _to_ring_dynamic(x, axis, eff_cap, true_len)
+        # non-ring: the pad bucket -> capacity is static either way; with
+        # true_len the garbage beyond it rides along unread (decode
+        # overwrites slot ``len`` before attention unmasks it)
+        return _pad_time(x, axis, eff_cap)
+
+    def fix_len(len_leaf):
+        if true_len is None:
+            return len_leaf
+        return jnp.full_like(len_leaf, true_len)
 
     def walk(node):
         if isinstance(node, dict):
             if "k" in node and "v" in node and "len" in node:
                 out = dict(node)
-                fix = _to_ring if window else _pad_time
-                arg = window if window else eff_cap
-                out["k"] = fix(node["k"], node["k"].ndim - 3, arg)
-                out["v"] = fix(node["v"], node["v"].ndim - 3, arg)
+                out["k"] = fix_time(node["k"], node["k"].ndim - 3)
+                out["v"] = fix_time(node["v"], node["v"].ndim - 3)
                 for s in ("k_s", "v_s"):  # int8-cache scales: (.., S, Hk)
                     if s in node:
-                        out[s] = fix(node[s], node[s].ndim - 2, arg)
+                        out[s] = fix_time(node[s], node[s].ndim - 2)
+                out["len"] = fix_len(node["len"])
                 return out
             if "latent" in node and "k_rope" in node:
                 out = dict(node)
-                out["latent"] = _pad_time(node["latent"], node["latent"].ndim - 2, eff_cap)
-                out["k_rope"] = _pad_time(node["k_rope"], node["k_rope"].ndim - 2, eff_cap)
+                out["latent"] = _pad_time(node["latent"],
+                                          node["latent"].ndim - 2, eff_cap)
+                out["k_rope"] = _pad_time(node["k_rope"],
+                                          node["k_rope"].ndim - 2, eff_cap)
+                if "len" in node:
+                    out["len"] = fix_len(node["len"])
                 return out
             return {k: walk(v) for k, v in node.items()}
         return node

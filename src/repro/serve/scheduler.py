@@ -1,45 +1,80 @@
 """Request scheduler for continuous batching.
 
-Requests arrive with a prompt and a max_new_tokens budget; the scheduler
-admits them into free decode slots (paper §V-C: EU-stage weight-tile reuse
-across requests is what makes multi-batch decode cheap — the engine keeps
-slots as full as possible so every streamed WI tile is reused by all
-active requests).
+Typed ``GenerationRequest``s (serve/api.py) arrive through the engine;
+the scheduler wraps each in a ``TrackedRequest`` (runtime record: uid,
+generated tokens, timing marks) and admits them into free decode slots
+(paper §V-C: EU-stage weight-tile reuse across requests is what makes
+multi-batch decode cheap — the engine keeps slots as full as possible so
+every streamed WI tile is reused by all active requests).
+
+The queue is BOUNDED: ``max_queue`` caps waiting requests and ``submit``
+raises ``QueueFull`` instead of growing the deque without limit — the
+engine turns that into a clean ``RequestOutput(finish_reason="rejected")``.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, List, Optional
 
-import numpy as np
+from repro.serve.api import GenerationRequest
+
+
+class QueueFull(Exception):
+    """Raised by ``Scheduler.submit`` when the waiting queue is at
+    ``max_queue``; the engine rejects the request instead of queueing."""
 
 
 @dataclasses.dataclass
-class Request:
+class TrackedRequest:
+    """Engine-side runtime record of one submitted request."""
+
     uid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int
+    request: GenerationRequest
     generated: List[int] = dataclasses.field(default_factory=list)
+    submit_t: float = dataclasses.field(default_factory=time.perf_counter)
+    queue_wait_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_t0: float = 0.0           # set when the request joins decode
     done: bool = False
 
     @property
     def prompt_len(self) -> int:
-        return int(self.prompt.shape[0])
+        return self.request.prompt_len
+
+    @property
+    def stop_set(self) -> frozenset:
+        return self.request.stop_set
 
 
 class Scheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, max_queue: int = 256):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.num_slots = num_slots
-        self.queue: Deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.max_queue = max_queue
+        self.queue: Deque[TrackedRequest] = deque()
+        self.slots: List[Optional[TrackedRequest]] = [None] * num_slots
         self._uid = 0
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def next_uid(self) -> int:
+        """Allocate a uid without enqueueing (rejected submissions get a
+        uid too, so their RequestOutput is addressable)."""
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
         return self._uid
+
+    def submit(self, request: GenerationRequest,
+               uid: Optional[int] = None) -> int:
+        """Enqueue a typed request; raises ``QueueFull`` at the bound."""
+        if len(self.queue) >= self.max_queue:
+            raise QueueFull(
+                f"scheduler queue is at max_queue={self.max_queue}")
+        uid = self.next_uid() if uid is None else uid
+        self.queue.append(TrackedRequest(uid, request))
+        return uid
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -58,7 +93,7 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
-    def finish(self, slot: int) -> Request:
+    def finish(self, slot: int) -> TrackedRequest:
         r = self.slots[slot]
         assert r is not None
         r.done = True

@@ -1,0 +1,161 @@
+"""serve/kvcache.py edge cases: ring conversion at S == window, rings
+larger than capacity (window > capacity), int8 KV-scale leaves, and the
+dynamic true_len (bucketed prefill) path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.kvcache import pad_prefill_cache
+
+
+def _attn_cache(S, B=1, Hk=2, hd=4, int8=False, seed=0):
+    rng = np.random.default_rng(seed)
+    cache = {
+        "k": jnp.asarray(rng.normal(size=(B, S, Hk, hd)).astype(np.float32)),
+        "v": jnp.asarray(rng.normal(size=(B, S, Hk, hd)).astype(np.float32)),
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+    if int8:
+        cache["k"] = (cache["k"] * 10).astype(jnp.int8)
+        cache["v"] = (cache["v"] * 10).astype(jnp.int8)
+        cache["k_s"] = jnp.asarray(
+            rng.normal(size=(B, S, Hk)).astype(np.float32)).astype(jnp.bfloat16)
+        cache["v_s"] = jnp.asarray(
+            rng.normal(size=(B, S, Hk)).astype(np.float32)).astype(jnp.bfloat16)
+    return cache
+
+
+class TestRingConversion:
+    def test_ring_at_exactly_window_is_identity(self):
+        """S == window: every position keeps its slot (slot = pos %
+        window = pos) — conversion must be a no-op on the values."""
+        cache = _attn_cache(S=8)
+        out = pad_prefill_cache(cache, 16, window=8)
+        np.testing.assert_array_equal(np.asarray(out["k"]),
+                                      np.asarray(cache["k"]))
+        np.testing.assert_array_equal(np.asarray(out["v"]),
+                                      np.asarray(cache["v"]))
+        assert out["k"].shape[1] == 8
+
+    def test_ring_order_matches_decode_slot_rule(self):
+        """S > window: slot s holds the newest position p with
+        p % window == s (the rule decode's write uses)."""
+        S, W = 13, 8
+        cache = _attn_cache(S=S)
+        out = pad_prefill_cache(cache, 16, window=W)
+        k_in = np.asarray(cache["k"])
+        k_out = np.asarray(out["k"])
+        for s in range(W):
+            newest = max(p for p in range(S) if p % W == s)
+            np.testing.assert_array_equal(k_out[:, s], k_in[:, newest])
+
+    def test_window_larger_than_capacity_sizes_to_capacity(self):
+        """window > capacity: init_cache allocates min(capacity, window)
+        time slots and decode wraps by that size — the converted ring
+        must match it, not the raw window (previously produced an
+        oversized ring the slot insert could not accept)."""
+        S, W, cap = 12, 16, 8
+        cache = _attn_cache(S=S)
+        out = pad_prefill_cache(cache, cap, window=W)
+        assert out["k"].shape[1] == cap
+        assert out["v"].shape[1] == cap
+        k_in = np.asarray(cache["k"])
+        k_out = np.asarray(out["k"])
+        # slot rule at the DECODE ring size (cap), not the window
+        for s in range(cap):
+            newest = max(p for p in range(S) if p % cap == s)
+            np.testing.assert_array_equal(k_out[:, s], k_in[:, newest])
+
+    def test_short_prefill_pads_to_ring_size(self):
+        cache = _attn_cache(S=5)
+        out = pad_prefill_cache(cache, 32, window=8)
+        assert out["k"].shape[1] == 8
+        np.testing.assert_array_equal(np.asarray(out["k"])[:, :5],
+                                      np.asarray(cache["k"]))
+        np.testing.assert_array_equal(np.asarray(out["k"])[:, 5:], 0)
+
+
+class TestInt8ScaleLeaves:
+    def test_scales_follow_values_through_ring(self):
+        """k_s/v_s (time axis ndim-2) must reorder exactly like k/v."""
+        S, W = 11, 8
+        cache = _attn_cache(S=S, int8=True)
+        out = pad_prefill_cache(cache, 16, window=W)
+        assert out["k_s"].shape[1] == W and out["v_s"].shape[1] == W
+        ks_in = np.asarray(cache["k_s"].astype(jnp.float32))
+        ks_out = np.asarray(out["k_s"].astype(jnp.float32))
+        for s in range(W):
+            newest = max(p for p in range(S) if p % W == s)
+            np.testing.assert_array_equal(ks_out[:, s], ks_in[:, newest])
+
+    def test_scales_pad_like_values_without_window(self):
+        cache = _attn_cache(S=6, int8=True)
+        out = pad_prefill_cache(cache, 12)
+        assert out["k_s"].shape[1] == 12 and out["v"].shape[1] == 12
+        np.testing.assert_array_equal(
+            np.asarray(out["v_s"].astype(jnp.float32))[:, :6],
+            np.asarray(cache["v_s"].astype(jnp.float32)))
+        np.testing.assert_array_equal(
+            np.asarray(out["k_s"].astype(jnp.float32))[:, 6:], 0)
+
+    def test_capacity_overflow_still_loud(self):
+        """The deep ValueError remains as a backstop for non-engine
+        callers (the engine rejects oversized prompts at submit)."""
+        cache = _attn_cache(S=20)
+        with pytest.raises(ValueError, match="exceeds capacity"):
+            pad_prefill_cache(cache, 12)
+
+
+class TestDynamicTrueLen:
+    """Bucketed prefill: the cache's static time length is the padded
+    bucket; true_len rides along as a traced scalar."""
+
+    def _sliced_ref(self, cache, L, cap, window):
+        sliced = {k: (v[:, :L] if k in ("k", "v", "k_s", "v_s") else
+                      jnp.full_like(v, L))
+                  for k, v in cache.items()}
+        return pad_prefill_cache(sliced, cap, window=window)
+
+    @pytest.mark.parametrize("L,window", [(5, 8), (11, 8), (8, 8), (3, 0),
+                                          (11, 0)])
+    def test_matches_static_conversion_of_true_prefix(self, L, window):
+        bucket, cap = 16, 16
+        cache = _attn_cache(S=bucket, int8=(window == 8))
+        got = jax.jit(
+            lambda c, tl: pad_prefill_cache(c, cap, window=window,
+                                            true_len=tl)
+        )(cache, jnp.asarray(L, jnp.int32))
+        ref = self._sliced_ref(cache, L, cap, window)
+        assert got["k"].shape == ref["k"].shape
+        np.testing.assert_array_equal(np.asarray(got["len"]), L)
+        ring = min(cap, window) if window else cap
+        # every slot that is VALID at len == L must match the static
+        # conversion (invalid slots hold masked garbage by design)
+        valid = [s for s in range(ring)
+                 if (L > s if L <= ring or not window else True)]
+        for key in ("k", "v") + (("k_s", "v_s") if window == 8 else ()):
+            g = np.asarray(got[key].astype(jnp.float32))
+            r = np.asarray(ref[key].astype(jnp.float32))
+            for s in valid:
+                np.testing.assert_array_equal(g[:, s], r[:, s], err_msg=key)
+
+    def test_mla_latent_len_overridden(self):
+        rng = np.random.default_rng(0)
+        cache = {
+            "latent": jnp.asarray(rng.normal(size=(1, 12, 4)).astype(np.float32)),
+            "k_rope": jnp.asarray(rng.normal(size=(1, 12, 2)).astype(np.float32)),
+            "len": jnp.full((1,), 12, jnp.int32),
+        }
+        out = pad_prefill_cache(cache, 16, true_len=jnp.asarray(7, jnp.int32))
+        assert out["latent"].shape[1] == 16
+        np.testing.assert_array_equal(np.asarray(out["len"]), 7)
+        np.testing.assert_array_equal(np.asarray(out["latent"])[:, :12],
+                                      np.asarray(cache["latent"]))
+
+    def test_recurrent_state_passes_through(self):
+        state = {"h": jnp.ones((1, 4)), "conv": jnp.zeros((1, 3, 4))}
+        out = pad_prefill_cache({"rec": state}, 16,
+                                true_len=jnp.asarray(5, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out["rec"]["h"]), 1)
+        assert out["rec"]["conv"].shape == (1, 3, 4)

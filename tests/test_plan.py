@@ -474,13 +474,16 @@ class TestEnginePreplan:
         with caplog.at_level(logging.INFO, logger="repro.serve.engine"):
             eng = Engine(model, params, rc,
                          EngineConfig(num_slots=3, max_len=32))
-        assert eng.plans["decode"] and eng.plans["prefill@cap"]
+        assert eng.plans["decode"]
         # decode plans at slot capacity (M = num_slots); prefill entries
-        # are capacity-bound estimates at M = max_len
+        # are EXACT per-bucket plans at the padded execution lengths
+        # (replacing the old single capacity-bound prefill@cap estimate)
         vq_decode = [pl for _p, pl in eng.plans["decode"]
                      if pl.spec.kind == "vq"]
         assert vq_decode and all(pl.spec.M == 3 for pl in vq_decode)
-        assert all(pl.spec.M == 32 for _p, pl in eng.plans["prefill@cap"])
+        assert "prefill@cap" not in eng.plans
+        for m in (8, 16, 32):
+            assert all(pl.spec.M == m for _p, pl in eng.plans[f"prefill@{m}"])
         assert any("plan" in r.message for r in caplog.records)
 
     def test_decode_preplan_warms_traced_step(self):
@@ -500,10 +503,18 @@ class TestEnginePreplan:
                        remat=False, attn_chunk=16)
         eng = Engine(model, params, rc, EngineConfig(num_slots=2, max_len=32))
         planner = plan_mod.default_planner()
-        tokens = jnp.zeros((2, 1), jnp.int32)
-        positions = jnp.zeros((2, 1), jnp.int32)
+        from repro.serve import api as serve_api
+
         before = planner.cache_info()
-        eng._decode_fn(params, tokens, positions, eng.caches)  # traces
+        eng._decode_fn(  # traces: decode + in-jit sampling state
+            params, eng.caches,
+            jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.int32),
+            jnp.zeros((2, 2), jnp.uint32), jnp.ones((2,), jnp.float32),
+            jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.float32),
+            jnp.ones((2,), bool),
+            jnp.full((2, serve_api.MAX_STOP_IDS), -1, jnp.int32),
+            jnp.ones((2,), jnp.int32), jnp.ones((2,), bool),
+        )
         after = planner.cache_info()
         # tracing plans each call site; every vq-leaf spec was pre-planned
         # (dense sites may differ in out_dtype, e.g. the fp32 lm_head)
