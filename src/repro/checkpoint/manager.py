@@ -105,6 +105,14 @@ def _unflatten_from_paths(flat: Dict[str, Any]) -> Any:
     return rebuild(root)
 
 
+# Public aliases: the path-flattened format is also the serving engine's
+# snapshot wire format (serve/resilience.EngineSnapshot serializes KV
+# caches + per-slot sampling state through it), so the flatteners are
+# part of the module's API, not private helpers.
+flatten_with_paths = _flatten_with_paths
+unflatten_from_paths = _unflatten_from_paths
+
+
 # ----------------------------------------------------------------- manager
 
 

@@ -54,7 +54,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import importlib
+import logging
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -65,9 +67,16 @@ from repro.core import ops
 from repro.core.ops import EPILOGUES
 from repro.core.vq import VQWeight
 
+log = logging.getLogger(__name__)
+
 WEIGHT_KINDS = ("dense", "int8", "vq")
 VQ_MODES = ("none", "eva", "dequant")
 IMPLS = ("jnp", "pallas")
+
+# backends quarantined after a failure are retried after this cool-off;
+# a transient failure (driver hiccup, OOM under pressure) recovers, a
+# persistent one re-quarantines on the next attempt
+DEFAULT_BACKEND_COOLOFF_S = 30.0
 
 
 # ---------------------------------------------------------------------------
@@ -353,7 +362,8 @@ class Planner:
     model, only the choice among multiple eligible backends does."""
 
     def __init__(self, maxsize: int = 1024,
-                 calibration: Any = "default"):
+                 calibration: Any = "default",
+                 cooloff_s: float = DEFAULT_BACKEND_COOLOFF_S):
         self._cache: "collections.OrderedDict[Tuple[LinearSpec, PlanPolicy], MatmulPlan]" = (
             collections.OrderedDict())
         self._maxsize = maxsize
@@ -363,6 +373,68 @@ class Planner:
         self._calibration: Optional[calibrate_mod.Calibration] = (
             calibrate_mod.load_default_calibration()
             if calibration == "default" else calibration)
+        # graceful degradation: backend name -> monotonic quarantine
+        # expiry. A quarantined backend is skipped by ranking until its
+        # cool-off passes; both quarantine and release clear the plan
+        # cache so re-planning actually changes the choice.
+        self.cooloff_s = cooloff_s
+        self._quarantine: Dict[str, float] = {}
+        self._backend_failures: Dict[str, int] = collections.Counter()
+        self._exec_fallbacks = 0
+
+    # ---- backend quarantine (graceful degradation)
+    def record_backend_failure(self, backend: str,
+                               cooloff_s: Optional[float] = None) -> None:
+        """Quarantine ``backend`` for ``cooloff_s`` (planner default when
+        None): ranking skips it until the cool-off expires, then it
+        becomes a candidate again (transient failures recover). The plan
+        cache is cleared so already-planned sites re-rank too."""
+        with self._lock:
+            self._backend_failures[backend] += 1
+            self._quarantine[backend] = time.monotonic() + (
+                self.cooloff_s if cooloff_s is None else cooloff_s)
+            self._cache.clear()
+        log.warning("backend %r quarantined for %.1fs (%d failures so far)",
+                    backend, self.cooloff_s if cooloff_s is None else cooloff_s,
+                    self._backend_failures[backend])
+
+    def _active_quarantine(self) -> Tuple[str, ...]:
+        """Currently-quarantined backend names; expired entries are
+        released here (and the cache cleared, so the recovered backend
+        is actually re-ranked rather than shadowed by cached fallbacks)."""
+        now = time.monotonic()
+        with self._lock:
+            expired = [b for b, t in self._quarantine.items() if now >= t]
+            for b in expired:
+                del self._quarantine[b]
+            if expired:
+                self._cache.clear()
+            active = tuple(self._quarantine)
+        for b in expired:
+            log.info("backend %r released from quarantine (cool-off "
+                     "expired); re-ranking on next plan", b)
+        return active
+
+    def reset_quarantine(self) -> None:
+        """Forget all quarantines + failure counts and clear the plan
+        cache (tests around the GLOBAL default planner must call this to
+        avoid cross-test contamination)."""
+        with self._lock:
+            self._quarantine.clear()
+            self._backend_failures.clear()
+            self._exec_fallbacks = 0
+            self._cache.clear()
+
+    def backend_stats(self) -> Dict[str, Any]:
+        """Failure/fallback accounting: per-backend failure counts, the
+        currently quarantined set and how many execute-time fallback
+        switches the planned run chains performed."""
+        with self._lock:
+            failures = dict(self._backend_failures)
+            fallbacks = self._exec_fallbacks
+        return {"failures": failures,
+                "quarantined": self._active_quarantine(),
+                "exec_fallbacks": fallbacks}
 
     @property
     def calibration(self) -> Optional[calibrate_mod.Calibration]:
@@ -376,6 +448,7 @@ class Planner:
                              if calibration == "default" else calibration)
 
     def plan(self, spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+        quarantined = self._active_quarantine()  # may purge + clear cache
         key = (spec, policy)
         with self._lock:
             hit = self._cache.get(key)
@@ -396,6 +469,35 @@ class Planner:
             raise ValueError(
                 f"no registered backend matches spec={spec} policy={policy}; "
                 f"registered: {tuple(_REGISTRY)}")
+        if quarantined:
+            healthy = tuple(be for be in matched
+                            if be.name not in quarantined)
+            if healthy:
+                matched = healthy
+            else:
+                # every eligible backend is quarantined: degrade stepwise
+                # — first to the plain jnp formulation of the same mode,
+                # then (for EVA) to the dequant jnp baseline, which is
+                # token-exact vs EVA and always available — rather than
+                # refusing to serve
+                degraded = dataclasses.replace(
+                    policy, impl="jnp", epilogue="auto",
+                    block_v=None, interpret=False)  # lint-ok: PlanPolicy field
+                if degraded == policy and policy.vq_mode == "eva":
+                    degraded = dataclasses.replace(degraded,
+                                                   vq_mode="dequant")
+                if degraded != policy:
+                    log.warning(
+                        "all matched backends %s quarantined for spec=%s; "
+                        "degrading policy to %s",
+                        tuple(be.name for be in matched), spec, degraded)
+                    return self.plan(spec, degraded)
+                # last resort: even the degraded jnp candidates are
+                # quarantined — refusing to serve is worse than retrying
+                # a possibly-recovered backend, so ignore the quarantine
+                log.error(
+                    "all backends quarantined even under the degraded jnp "
+                    "policy for spec=%s; ignoring quarantine", spec)
         built = self._rank(matched, spec, policy)
         with self._lock:  # (re-planning a raced key is harmless)
             self._misses += 1
@@ -430,10 +532,40 @@ class Planner:
             scored.append((us, order, candidate))
         scored.sort(key=lambda t: (t[0], t[1]))
         us, _, chosen = scored[0]
+        ranked_plans = tuple(c for _, _, c in scored)
+        run = (self._chain_run(ranked_plans) if len(ranked_plans) > 1
+               else chosen.run)
         return dataclasses.replace(
-            chosen, predicted_us=us, provenance=prov,
+            chosen, run=run, predicted_us=us, provenance=prov,
             ranking=tuple((c.backend, round(u, 3)) for u, _, c in scored),
         )
+
+    def _chain_run(self, ranked: Tuple[MatmulPlan, ...]
+                   ) -> Callable[[Any, Any], Any]:
+        """Bake the ranked candidates into one run callable: when the
+        chosen backend raises while the planned matmul is being BUILT
+        (trace/lowering time — where Pallas kernel failures surface),
+        the next-cheapest candidate takes over in place, the failed
+        backend is quarantined for the cool-off and the fallback is
+        counted. Already-compiled executions never re-enter Python, so
+        the chain costs nothing on the steady-state path."""
+
+        def run(x, leaf):
+            last_err: Optional[Exception] = None
+            for cand in ranked:
+                try:
+                    return cand.run(x, leaf)
+                except Exception as e:  # noqa: BLE001 - any backend fault
+                    last_err = e
+                    self.record_backend_failure(cand.backend)
+                    with self._lock:
+                        self._exec_fallbacks += 1
+                    log.warning("planned backend %r failed at execute "
+                                "(%s: %s); trying next-cheapest candidate",
+                                cand.backend, type(e).__name__, e)
+            raise last_err
+
+        return run
 
     def _usable_entry(self, backend: str
                       ) -> Optional["calibrate_mod.BackendCalibration"]:
@@ -469,6 +601,12 @@ _PLANNER = Planner()
 
 def default_planner() -> Planner:
     return _PLANNER
+
+
+def reset_quarantine() -> None:
+    """Clear the DEFAULT planner's backend quarantine + failure stats
+    (test hygiene: the default planner is process-global)."""
+    _PLANNER.reset_quarantine()
 
 
 def plan(spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:

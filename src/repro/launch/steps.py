@@ -151,21 +151,22 @@ def make_serve_decode_step(model: Model, rc: RunConfig):
     plus the in-jit per-slot sampling/stopping epilogue
     (serve/api.sample_and_stop). Dry-runs lowering this step see the true
     production memory/roofline — logits never leave the device, the host
-    reads back only (next_tok, done_mask)."""
+    reads back only (next_tok, done_mask, bad_mask); the per-lane finite
+    check and the fault-injection poison lane ride the same readback."""
     from repro.serve import api as serve_api
 
     def serve_decode_step(params, caches, tokens, positions, keys,
                           temperature, top_k, top_p, greedy, stop_ids,
-                          remaining, active):
+                          remaining, active, poison):
         rc_d = rc.replace(mode="decode")
         logits, new_caches = model.decode(
             params, tokens[:, None], positions[:, None], caches, rc_d)
-        logits = logits[:, 0, : model.cfg.vocab_size]
-        tok, done, new_keys = serve_api.sample_and_stop(
+        logits = logits[:, 0, : model.cfg.vocab_size] + poison[:, None]
+        tok, done, bad, new_keys = serve_api.sample_and_stop(
             logits, keys=keys, temperature=temperature, top_k=top_k,
             top_p=top_p, greedy=greedy, stop_ids=stop_ids,
             remaining=remaining, active=active)
-        return tok, done, new_keys, new_caches
+        return tok, done, bad, new_keys, new_caches
 
     return serve_decode_step
 
@@ -187,6 +188,7 @@ def serve_state_specs(batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
         "stop_ids": sds((batch, serve_api.MAX_STOP_IDS), jnp.int32),
         "remaining": sds((batch,), jnp.int32),
         "active": sds((batch,), jnp.bool_),
+        "poison": sds((batch,), jnp.float32),
     }
 
 
@@ -244,7 +246,8 @@ def lower_serve_decode_step(model: Model, mesh: Mesh, specs: Dict[str, Any],
     cspec = shd.cache_pspecs(specs["caches"], mesh)
     repl = NamedSharding(mesh, P())
     state_order = ("tokens", "positions", "keys", "temperature", "top_k",
-                   "top_p", "greedy", "stop_ids", "remaining", "active")
+                   "top_p", "greedy", "stop_ids", "remaining", "active",
+                   "poison")
     with mesh:
         jitted = jax.jit(
             step,

@@ -87,6 +87,14 @@ def run_with_restarts(
     last committed checkpoint (it receives the resume step returned by
     `on_failure`, default: same step). Mirrors the controller loop a real
     cluster runs around the SPMD program.
+
+    Only exceptions raised by `train_loop` itself count as training
+    failures. An exception raised by the `on_failure` callback is a
+    CONTROLLER bug, not a node loss: it propagates directly — unwrapped,
+    not recorded in `failures`, and without Python's implicit
+    "during handling of the above exception" chaining (the callback runs
+    outside the except block), so callers can tell the two apart.
+    `last_resume_step` is updated on every restart, callback or not.
     """
     stats = RestartStats()
     start_step = 0
@@ -95,11 +103,16 @@ def run_with_restarts(
             train_loop(start_step)
             return stats
         except Exception as e:  # noqa: BLE001 - controller catches anything
-            stats.restarts += 1
-            stats.failures.append(f"{type(e).__name__}: {e}")
-            if stats.restarts > max_restarts:
-                raise RuntimeError(
-                    f"exceeded {max_restarts} restarts; last: {e}"
-                ) from e
-            start_step = on_failure(e, stats.restarts) if on_failure else start_step
-            stats.last_resume_step = start_step
+            err = e
+        stats.restarts += 1
+        stats.failures.append(f"{type(err).__name__}: {err}")
+        if stats.restarts > max_restarts:
+            raise RuntimeError(
+                f"exceeded {max_restarts} restarts; last: {err}"
+            ) from err
+        if on_failure is not None:
+            # callback errors propagate from HERE, outside the except
+            # block: no implicit exception chaining, no burned restart
+            # recorded against the training loop
+            start_step = on_failure(err, stats.restarts)
+        stats.last_resume_step = start_step

@@ -1,6 +1,9 @@
-from repro.serve.api import (GenerationRequest, RequestOutput, SamplingParams,
-                             StreamEvent)
+from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
+                             SamplingParams, StreamEvent)
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.kvcache import pad_prefill_cache, cache_bytes
 from repro.serve.metrics import EngineMetrics
+from repro.serve.resilience import (CircuitBreaker, EngineSnapshot, FaultPlan,
+                                    FaultSpec, InjectedFault,
+                                    serve_with_restarts)
 from repro.serve.scheduler import QueueFull, Scheduler, TrackedRequest

@@ -32,7 +32,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-FINISH_REASONS = ("stop", "length", "rejected")
+FINISH_REASONS = (
+    "stop", "length", "rejected",
+    # resilience layer (serve/resilience.py):
+    #   error    : the request's own logits went non-finite (numerics
+    #              quarantine) — the slot is freed, the rest of the batch
+    #              streams on
+    #   timeout  : per-request deadline_s / engine queue TTL expired
+    #   *-after-restore : the request was in flight when a crashed engine
+    #              was restored from a snapshot; its stream replayed
+    #              token-identically, but the reason records the restore
+    "error", "timeout", "stop-after-restore", "length-after-restore",
+)
+
+
+class RequestEvicted(KeyError):
+    """Raised by ``Engine.stream()`` for a uid that WAS served but whose
+    terminal output and event buffer were FIFO-evicted past
+    ``EngineConfig.max_retained`` — distinct from a never-submitted
+    (unknown) uid, which stays a plain KeyError."""
 
 # width of the per-slot stop-token set device array (eos_ids +
 # stop_token_ids, padded with -1); a request needing more raises at submit
@@ -83,13 +101,22 @@ class GenerationRequest:
     ``eos_ids`` and ``stop_token_ids`` both terminate the request with
     ``finish_reason="stop"`` the step the token is EMITTED (the stop token
     is included in the output); exhausting ``max_new_tokens`` finishes
-    with ``finish_reason="length"``."""
+    with ``finish_reason="length"``.
+
+    ``deadline_s`` is a per-request wall-clock budget measured from
+    submit: once exceeded the engine finishes the request with
+    ``finish_reason="timeout"`` — at admission (a queued request never
+    wastes a prefill), between decode steps (a wedged request stops
+    holding its slot and KV allocation) and while ``stream()``ing. None
+    means no deadline (the engine's ``queue_ttl_s`` still bounds queue
+    wait)."""
 
     prompt: np.ndarray
     max_new_tokens: int = 16
     sampling: SamplingParams = GREEDY
     eos_ids: Tuple[int, ...] = ()
     stop_token_ids: Tuple[int, ...] = ()
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -102,6 +129,9 @@ class GenerationRequest:
         object.__setattr__(self, "eos_ids", tuple(int(t) for t in self.eos_ids))
         object.__setattr__(self, "stop_token_ids",
                            tuple(int(t) for t in self.stop_token_ids))
+        if self.deadline_s is not None and self.deadline_s < 0:
+            raise ValueError(
+                f"deadline_s must be None or >= 0, got {self.deadline_s}")
 
     @property
     def prompt_len(self) -> int:
@@ -259,17 +289,26 @@ def sample_and_stop(logits: jax.Array, *, keys: jax.Array,
                     top_p: jax.Array, greedy: jax.Array,
                     stop_ids: jax.Array, remaining: jax.Array,
                     active: jax.Array
-                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """The serving decode epilogue: sample one token per slot, then
-    evaluate the per-slot stop condition on device.
+    evaluate the per-slot stop condition AND logits validity on device.
 
     stop_ids (B, MAX_STOP) i32 padded with -1; remaining (B,) i32 tokens
     still allowed including this one; active (B,) bool. Returns
-    (next_tok, done, new_keys): ``done`` is True on the step a slot emits
-    a stop-set token or exhausts its budget — the host never scans
-    generated streams. Inactive lanes emit token 0 and stay not-done."""
+    (next_tok, done, bad, new_keys): ``done`` is True on the step a slot
+    emits a stop-set token or exhausts its budget — the host never scans
+    generated streams. ``bad`` is True for an active slot whose logits
+    row contains any NaN/Inf — the numerics-quarantine mask. It is an
+    all-finite reduction computed on device and read back WITH the
+    (next_tok, done) pair, so per-slot validity costs no extra device
+    sync; the engine finishes bad slots with ``finish_reason="error"``
+    while the rest of the batch streams on. Inactive lanes emit token 0
+    and stay not-done, not-bad. A bad lane's sampled token is
+    meaningless and is never emitted (the engine drops it); ``done`` is
+    masked False there so one readback has one disposition per lane."""
     tok, new_keys = sample_tokens(logits, keys, temperature, top_k, top_p,
                                   greedy)
+    bad = active & ~jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
     hit_stop = jnp.any(tok[:, None] == stop_ids, axis=-1)
-    done = active & (hit_stop | (remaining <= 1))
-    return jnp.where(active, tok, 0), done, new_keys
+    done = active & ~bad & (hit_stop | (remaining <= 1))
+    return jnp.where(active, tok, 0), done, bad, new_keys

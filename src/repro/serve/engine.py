@@ -45,14 +45,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import manager as ckpt_manager
 from repro.core import plan as plan_mod
 from repro.models.api import Model
 from repro.models.common import RunConfig
+from repro.runtime.fault_tolerance import StepWatchdog
 from repro.serve import api
-from repro.serve.api import (GenerationRequest, RequestOutput, SamplingParams,
-                             StreamEvent)
+from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
+                             SamplingParams, StreamEvent)
 from repro.serve.kvcache import pad_prefill_cache
 from repro.serve.metrics import EngineMetrics
+from repro.serve.resilience import (CircuitBreaker, EngineSnapshot, FaultPlan,
+                                    InjectedFault)
 from repro.serve.scheduler import QueueFull, Scheduler, TrackedRequest
 
 log = logging.getLogger(__name__)
@@ -87,6 +91,21 @@ class EngineConfig:
     # for output()/stream(); oldest evicted past this bound so a
     # long-running submit()/step() server stays memory-bounded
     max_retained: int = 1024
+    # ---- resilience (serve/resilience.py) ----
+    # queued requests older than this time out at the admission sweep
+    # (finish_reason="timeout") — per-request deadline_s is checked too
+    queue_ttl_s: Optional[float] = None
+    # stream() raises RuntimeError after this long without yielding an
+    # event (replaces the old 1,000,000-iteration guard with wall clock)
+    stream_stall_s: float = 60.0
+    # >= breaker_k CONSECUTIVE poisoned decode steps trip the engine
+    # unhealthy: pending requests reject cleanly, submits refuse
+    breaker_k: int = 3
+    # decode steps slower than threshold x rolling median are stragglers
+    # (runtime/fault_tolerance.StepWatchdog -> metrics straggler_steps)
+    straggler_threshold: float = 3.0
+    # scripted fault schedule for tests/chaos drills; None in production
+    fault_plan: Optional[FaultPlan] = None
 
 
 class Engine:
@@ -127,6 +146,15 @@ class Engine:
         # trace-counting harness: these tick only when jax (re)traces the
         # python body — tests pin decode==1 and prefill<=len(buckets)
         self.trace_counts = {"decode": 0, "prefill": 0}
+
+        # resilience state: engine tick counter (FaultPlan schedule / the
+        # snapshot resume point), numerics circuit breaker and the decode
+        # step watchdog
+        self._tick = 0
+        self.fault_plan = ecfg.fault_plan
+        self.breaker = CircuitBreaker(ecfg.breaker_k)
+        self.watchdog = StepWatchdog(window=50,
+                                     threshold=ecfg.straggler_threshold)
 
         self._bucketed = (ecfg.prefill_bucketing
                           and cfg.family in _BUCKETABLE_FAMILIES)
@@ -213,6 +241,11 @@ class Engine:
                 f"request has {len(request.stop_set)} stop ids; the engine "
                 f"supports at most {api.MAX_STOP_IDS} (api.MAX_STOP_IDS)")
         self.metrics_counters.submitted += 1
+        if not self.healthy:
+            return self._reject(
+                request,
+                f"engine unhealthy: circuit breaker tripped after "
+                f"{self.breaker.consecutive} consecutive poisoned steps")
         why = self._admission_error(request)
         if why is not None:
             return self._reject(request, why)
@@ -248,26 +281,46 @@ class Engine:
 
     # ------------------------------------------------------------- prefill
     def _prefill_impl(self, params, tokens, true_len, key, temperature,
-                      top_k, top_p, greedy, extras, *, rc):
+                      top_k, top_p, greedy, poison, extras, *, rc):
         """Jitted per-request prefill: forward at the (bucket-)padded
         length, sample the first token from the logits at the TRUE last
         position, and convert the cache to decode capacity — all on
-        device, one trace per bucket."""
+        device, one trace per bucket.
+
+        ``poison`` is the fault-injection scalar (0.0 in production —
+        adding it is a no-op): a scripted NaN/Inf rides into the logits
+        here so the numerics quarantine is testable. ``bad`` (any
+        non-finite in the sampled row) reads back with the token —
+        no extra device sync."""
         self.trace_counts["prefill"] += 1
         batch = {"tokens": tokens}
         batch.update(extras)
         logits, cache = self.model.prefill(params, batch, rc)
         last = jax.lax.dynamic_slice_in_dim(
             logits[0], true_len - 1, 1, axis=0)[0]
-        last = last[: self.model.cfg.vocab_size][None]          # (1, V)
+        last = last[: self.model.cfg.vocab_size][None] + poison  # (1, V)
+        bad = ~jnp.all(jnp.isfinite(last.astype(jnp.float32)))
         tok, new_key = api.sample_tokens(
             last, key[None], temperature[None], top_k[None], top_p[None],
             greedy[None])
         cache = pad_prefill_cache(cache, self.ecfg.max_len,
                                   window=self.window, true_len=true_len)
-        return tok[0], new_key[0], cache
+        return tok[0], bad, new_key[0], cache
 
-    def _prefill_one(self, slot: int, tr: TrackedRequest) -> int:
+    def _prefill_one(self, slot: int, tr: TrackedRequest) -> "tuple[int, bool]":
+        """Prefill the admitted request into ``slot``. Returns
+        ``(first_token, bad)`` — ``bad`` means the sampled logits row
+        failed the finite check (injected or organic NaN/Inf): the slot
+        is NOT activated and the caller quarantines the request."""
+        if self.fault_plan is not None:
+            spec = self.fault_plan.poll("prefill", self._tick, tr.uid)
+            if spec is not None:
+                raise InjectedFault("prefill", self._tick, tr.uid)
+        poison = 0.0
+        if self.fault_plan is not None:
+            spec = self.fault_plan.poll("poison", self._tick, tr.uid)
+            if spec is not None:
+                poison = float("nan") if spec.mode == "nan" else float("inf")
         req = tr.request
         sp = req.sampling
         L = req.prompt_len
@@ -280,16 +333,21 @@ class Engine:
                 # read tokens[:, -1]) meaningful in tests
                 prompt = np.pad(prompt, (0, bucket - L), mode="edge")
         key = jax.random.PRNGKey(sp.seed)
-        tok, new_key, cache = self._prefill_fn(
+        tok, bad, new_key, cache = self._prefill_fn(
             self.params, jnp.asarray(prompt[None], jnp.int32),
             jnp.asarray(L, jnp.int32), jnp.asarray(key),
             jnp.asarray(sp.temperature, jnp.float32),
             jnp.asarray(sp.top_k, jnp.int32),
             jnp.asarray(sp.top_p, jnp.float32),
-            jnp.asarray(sp.greedy), self._extra_batch,
+            jnp.asarray(sp.greedy),
+            jnp.asarray(poison, jnp.float32), self._extra_batch,
         )
+        tok, bad = int(tok), bool(bad)
+        if bad:
+            # quarantine: never activate the slot, never stream the
+            # garbage token — the caller finishes with "error"
+            return tok, True
         self.caches = _insert_slot(self.caches, cache, slot)
-        tok = int(tok)
         tr.generated.append(tok)
 
         # per-slot decode state for this request
@@ -305,53 +363,123 @@ class Engine:
         self.stop_ids[slot, : len(stop)] = stop
         self.remaining[slot] = req.max_new_tokens - 1
         self.active[slot] = True
-        return tok
+        return tok, False
 
     # -------------------------------------------------------------- decode
     def _decode_impl(self, params, caches, tokens, positions, keys,
                      temperature, top_k, top_p, greedy, stop_ids, remaining,
-                     active, *, rc):
+                     active, poison, *, rc):
         """Jitted batched decode step: model decode + in-jit per-slot
         sampling and stopping (serve/api.sample_and_stop). Every
-        per-request knob is a fixed-shape device array -> ONE trace."""
+        per-request knob is a fixed-shape device array -> ONE trace.
+
+        ``poison`` (B,) is the fault-injection lane: all-zero in
+        production (adding it is a no-op, and it is DATA — injecting a
+        fault never retraces). ``bad`` flags lanes whose logits failed
+        the all-finite check; it rides the existing readback, costing no
+        extra device sync."""
         self.trace_counts["decode"] += 1
         logits, new_caches = self.model.decode(
             params, tokens[:, None], positions[:, None], caches, rc)
-        logits = logits[:, 0, : self.model.cfg.vocab_size]
-        tok, done, new_keys = api.sample_and_stop(
+        logits = logits[:, 0, : self.model.cfg.vocab_size] + poison[:, None]
+        tok, done, bad, new_keys = api.sample_and_stop(
             logits, keys=keys, temperature=temperature, top_k=top_k,
             top_p=top_p, greedy=greedy, stop_ids=stop_ids,
             remaining=remaining, active=active)
-        return tok, done, new_keys, new_caches
+        return tok, done, bad, new_keys, new_caches
 
     # ---------------------------------------------------------------- step
+    def _timeout_sweep(self) -> List[StreamEvent]:
+        """Enforce per-request ``deadline_s`` and the engine queue TTL
+        between steps: expired QUEUED requests time out before wasting a
+        prefill; expired ACTIVE requests free their slot before another
+        batched decode step is spent on them."""
+        m = self.metrics_counters
+        events: List[StreamEvent] = []
+        now = time.perf_counter()
+        ttl = self.ecfg.queue_ttl_s
+
+        def dead_in_queue(tr: TrackedRequest) -> bool:
+            return tr.expired(now) or (
+                ttl is not None and now - tr.submit_t > ttl)
+
+        for tr in self.sched.prune_queue(dead_in_queue):
+            m.count_finish("timeout")
+            self._outputs[tr.uid] = RequestOutput(
+                uid=tr.uid, tokens=(), finish_reason="timeout",
+                queue_wait_s=now - tr.submit_t)
+            events.append(StreamEvent(tr.uid, -1, None, "timeout"))
+            self._retain(tr.uid)
+        for b in list(self.sched.active_slots()):
+            tr = self.sched.slots[b]
+            if tr.expired(now):
+                events.append(
+                    StreamEvent(tr.uid, len(tr.generated), None, "timeout"))
+                self._finish_slot(b, "timeout")
+        return events
+
     def step(self) -> List[StreamEvent]:
-        """One engine tick: admit+prefill queued requests, one batched
-        decode step over active slots, retire finished requests. Returns
-        the tick's StreamEvents (prefill tokens, decode tokens, pending
-        rejections).
+        """One engine tick: deadline/TTL sweep, admit+prefill queued
+        requests, one batched decode step over active slots, retire
+        finished requests. Returns the tick's StreamEvents (prefill
+        tokens, decode tokens, pending rejections/timeouts).
 
         A request retires in the SAME step its stopping condition is met
         (stop-set token emitted / budget exhausted) — including straight
         out of prefill — so it never occupies a slot for an extra batched
         decode step. Free slots are masked out of the decode inputs
-        (token 0 at position 0) instead of replaying stale state."""
+        (token 0 at position 0) instead of replaying stale state.
+
+        Failure semantics: a lane whose logits fail the in-jit finite
+        check is QUARANTINED — its garbage token is never streamed, the
+        request finishes ``finish_reason="error"``, and the rest of the
+        batch streams on untouched (poison is additive per-lane data, so
+        bystander lanes are bit-identical to a fault-free run). ``k``
+        consecutive poisoned steps trip the circuit breaker: pending
+        requests are rejected and new submits refuse. A scripted
+        ``backend`` fault quarantines the planned backend and re-plans
+        (core/plan.py re-ranks; the next-cheapest candidate takes over).
+        Exceptions out of ``step()`` (scripted prefill/decode/sample
+        faults, real crashes) leave this tick's events undelivered —
+        ``snapshot()``/``restore()`` (serve/resilience.py
+        ``serve_with_restarts``) is the recovery path that resumes
+        token-identically without double-delivering."""
         m = self.metrics_counters
+        tick = self._tick
+        fp = self.fault_plan
         events: List[StreamEvent] = list(self._pending)
         self._pending.clear()
 
+        events.extend(self._timeout_sweep())
+
+        if fp is not None:
+            backend_spec = fp.poll("backend", tick)
+            if backend_spec is not None:
+                self._fail_backend(backend_spec.backend)
+
+        any_poisoned = False
+        did_work = False
         for slot in self.sched.admit():
             tr = self.sched.slots[slot]
+            did_work = True
             now = time.perf_counter()
             tr.queue_wait_s = now - tr.submit_t
             m.admitted += 1
             m.queue_wait_s += tr.queue_wait_s
-            tok = self._prefill_one(slot, tr)
+            tok, bad = self._prefill_one(slot, tr)
             tr.prefill_s = time.perf_counter() - now
             tr.decode_t0 = time.perf_counter()
             m.prefills += 1
             m.prefill_prompt_tokens += tr.prompt_len
             m.prefill_s += tr.prefill_s
+            if bad:
+                # numerics quarantine straight out of prefill: the
+                # garbage first token is suppressed, the request errors
+                m.poisoned_slot_steps += 1
+                any_poisoned = True
+                events.append(StreamEvent(tr.uid, 0, None, "error"))
+                self._finish_slot(slot, "error")
+                continue
             m.tokens_generated += 1
             # stop-set token straight out of prefill / budget of one:
             # retire before the request joins a decode batch at all
@@ -366,8 +494,19 @@ class Engine:
 
         active_idx = np.nonzero(self.active)[0]
         if active_idx.size:
+            did_work = True
+            if fp is not None and fp.poll("decode", tick) is not None:
+                raise InjectedFault("decode", tick)
+            poison = np.zeros((self.ecfg.num_slots,), np.float32)
+            if fp is not None:
+                for b in active_idx:
+                    spec = fp.poll("poison", tick, self.sched.slots[b].uid)
+                    if spec is not None:
+                        poison[b] = (np.nan if spec.mode == "nan"
+                                     else np.inf)
             t0 = time.perf_counter()
-            tok, done, new_keys, self.caches = self._decode_fn(
+            self.watchdog.start_step()
+            tok, done, bad, new_keys, self.caches = self._decode_fn(
                 self.params, self.caches,
                 jnp.asarray(np.where(self.active, self.last_token, 0)),
                 jnp.asarray(np.where(self.active, self.positions, 0)),
@@ -379,23 +518,43 @@ class Engine:
                 jnp.asarray(self.stop_ids),
                 jnp.asarray(self.remaining),
                 jnp.asarray(self.active),
+                jnp.asarray(poison),
             )
             tok = np.asarray(tok)
             done = np.asarray(done)
+            bad = np.asarray(bad)
+            rep = self.watchdog.end_step()
+            if rep.is_straggler:
+                m.straggler_steps += 1
+            if fp is not None and fp.poll("sample", tick) is not None:
+                # the classic torn-state crash: the device step already
+                # ran, host bookkeeping has not — only a snapshot
+                # restore recovers consistently
+                raise InjectedFault("sample", tick)
             # np.array (copy) — np.asarray of a device array is read-only,
             # and the next prefill writes per-slot keys in place
             self.rng_keys = np.array(new_keys)
+            n_bad = int(np.count_nonzero(bad))
             m.decode_steps += 1
             m.decode_slot_steps += int(active_idx.size)
             m.decode_s += time.perf_counter() - t0
-            m.tokens_generated += int(active_idx.size)
+            m.tokens_generated += int(active_idx.size) - n_bad
+            m.poisoned_slot_steps += n_bad
+            any_poisoned = any_poisoned or n_bad > 0
 
-            emitted = self.active.copy()
+            # only healthy lanes advance and emit; a poisoned lane's
+            # token never reaches its stream
+            emitted = self.active & ~bad
             self.positions[emitted] += 1
             self.remaining[emitted] -= 1
             self.last_token = np.where(emitted, tok, self.last_token)
             for b in active_idx:
                 tr = self.sched.slots[b]
+                if bad[b]:
+                    events.append(StreamEvent(tr.uid, len(tr.generated),
+                                              None, "error"))
+                    self._finish_slot(int(b), "error")
+                    continue
                 t = int(tok[b])
                 tr.generated.append(t)
                 idx = len(tr.generated) - 1
@@ -406,15 +565,65 @@ class Engine:
                 if reason is not None:
                     self._finish_slot(int(b), reason)
 
+        if did_work:
+            was_tripped = self.breaker.tripped
+            if self.breaker.record(any_poisoned) and not was_tripped:
+                events.extend(self._reject_pending_unhealthy())
+
         for ev in events:
             buf = self._buffers.get(ev.uid)
             if buf is not None:
                 buf.append(ev)
+        self._tick += 1
         return events
+
+    def _reject_pending_unhealthy(self) -> List[StreamEvent]:
+        """Circuit breaker just tripped: reject every queued request
+        cleanly instead of leaving it waiting on an engine that will
+        never serve it (in-flight slots keep draining)."""
+        m = self.metrics_counters
+        events: List[StreamEvent] = []
+        for tr in self.sched.drain_queue():
+            m.rejected += 1
+            log.error("request %d rejected: engine unhealthy (circuit "
+                      "breaker tripped)", tr.uid)
+            self._outputs[tr.uid] = RequestOutput(
+                uid=tr.uid, tokens=(), finish_reason="rejected")
+            events.append(StreamEvent(tr.uid, -1, None, "rejected"))
+            self._retain(tr.uid)
+        return events
+
+    def _fail_backend(self, name: Optional[str]) -> None:
+        """A scripted backend fault fired: quarantine the named backend
+        (default: the decode plan's chosen one) in the default planner
+        and re-jit the stepped functions — the retrace re-enters
+        core/plan.py's cost ranking, which now skips the quarantined
+        backend and bakes the next-cheapest candidate in."""
+        if name is None:
+            name = self.plans["decode"][0][1].backend
+        planner = plan_mod.default_planner()
+        planner.record_backend_failure(name)
+        self.metrics_counters.backend_fallbacks += 1
+        log.warning("backend %r failed and was quarantined; re-planning "
+                    "decode/prefill on the remaining candidates", name)
+        self._decode_fn = jax.jit(
+            functools.partial(self._decode_impl,
+                              rc=self.rc.replace(mode="decode")))
+        self._prefill_fn = jax.jit(
+            functools.partial(self._prefill_impl,
+                              rc=self.rc.replace(mode="prefill")))
+        self.plans["decode"] = plan_mod.preplan_params(
+            self.params, self.rc.policy, mode="decode",
+            m=self.ecfg.num_slots, act_dtype=self.model.cfg.act_dtype)
 
     def _finish_slot(self, slot: int, reason: str) -> TrackedRequest:
         tr = self.sched.finish(slot)
         self.active[slot] = False
+        # a request that crossed a snapshot restore mid-flight finishes
+        # with an annotated reason: the tokens are token-identical, the
+        # client can still SEE that delivery crossed a failover
+        if tr.restored and reason in ("stop", "length"):
+            reason = f"{reason}-after-restore"
         self.metrics_counters.count_finish(reason)
         decode_s = (time.perf_counter() - tr.decode_t0
                     if len(tr.generated) > 1 else 0.0)
@@ -430,21 +639,60 @@ class Engine:
     def idle(self) -> bool:
         return self.sched.idle and not self._pending
 
+    @property
+    def healthy(self) -> bool:
+        """False once the numerics circuit breaker tripped: submits are
+        refused and pending requests were rejected (the in-flight slots
+        still drain)."""
+        return not self.breaker.tripped
+
     def output(self, uid: int) -> Optional[RequestOutput]:
         """The terminal RequestOutput once ``uid`` finished (else None)."""
         return self._outputs.get(uid)
 
+    def evicted(self, uid: int) -> bool:
+        """True when ``uid`` WAS a real request whose retained output +
+        event buffer have been FIFO-evicted past ``max_retained`` —
+        distinct from a uid that was never issued (uids are dense and
+        1-based, so the scheduler counter bounds the issued set)."""
+        if not 1 <= uid <= self.sched.last_uid:
+            return False
+        if uid in self._outputs or uid in self._buffers:
+            return False
+        if any(tr.uid == uid for tr in self.sched.queue):
+            return False
+        if any(tr is not None and tr.uid == uid for tr in self.sched.slots):
+            return False
+        return True
+
     def stream(self, uid: int) -> Iterator[StreamEvent]:
         """Iterate ``uid``'s StreamEvents, driving ``step()`` as needed;
         ends after yielding the terminal event. Events for OTHER requests
-        produced along the way stay buffered for their own streams."""
+        produced along the way stay buffered for their own streams.
+
+        Raises ``RequestEvicted`` (a KeyError subclass) when the uid was
+        served but its buffer was FIFO-evicted past ``max_retained``,
+        plain ``KeyError`` when the uid was never issued or was already
+        drained — callers can tell "read it sooner / raise max_retained"
+        apart from "that uid never existed". A wall-clock stall guard
+        (``EngineConfig.stream_stall_s``) bounds how long the stream
+        drives an engine that makes no progress for this uid."""
         buf = self._buffers.get(uid)
         if buf is None:
+            if self.evicted(uid):
+                raise RequestEvicted(
+                    f"request {uid} was served but its events were evicted "
+                    f"past max_retained={self.ecfg.max_retained}; stream "
+                    "promptly or raise EngineConfig.max_retained")
+            if 1 <= uid <= self.sched.last_uid:
+                raise KeyError(
+                    f"request {uid} already streamed to completion")
             raise KeyError(f"unknown request uid {uid}")
-        guard = 0
+        t_last = time.perf_counter()
         while True:
             while buf:
                 ev = buf.popleft()
+                t_last = time.perf_counter()
                 yield ev
                 if ev.done:
                     self._buffers.pop(uid, None)
@@ -453,9 +701,100 @@ class Engine:
                 raise RuntimeError(
                     f"engine idle but request {uid} never finished")
             self.step()
-            guard += 1
-            if guard > 1_000_000:  # pragma: no cover
-                raise RuntimeError("stream() did not converge")
+            if not buf and (time.perf_counter() - t_last
+                            > self.ecfg.stream_stall_s):
+                raise RuntimeError(
+                    f"stream({uid}) stalled: no event for "
+                    f"{self.ecfg.stream_stall_s:.1f}s "
+                    f"(EngineConfig.stream_stall_s)")
+
+    # ----------------------------------------------------- snapshot/restore
+    _SLOT_STATE = ("positions", "last_token", "rng_keys", "temperature",
+                   "top_k", "top_p", "greedy", "stop_ids", "remaining",
+                   "active")
+
+    def snapshot(self) -> EngineSnapshot:
+        """Serialize the full engine state to host memory.
+
+        Everything a resumed engine needs to continue TOKEN-IDENTICALLY
+        mid-stream is captured: per-slot KV caches, PRNG keys, sampling/
+        stopping state (path-flattened through checkpoint/manager.py's
+        format, so the array state can also be persisted with
+        CheckpointManager — serve/resilience.save_snapshot), the
+        scheduler queue + tracked requests, finished outputs, undrained
+        event buffers, metrics counters and the breaker. Nothing aliases
+        live engine state — stepping after ``snapshot()`` cannot corrupt
+        the snapshot."""
+        m = self.metrics_counters
+        m.snapshots += 1
+        slot_state = {name: getattr(self, name) for name in self._SLOT_STATE}
+        flat = ckpt_manager.flatten_with_paths(
+            {"caches": self.caches, "slots": slot_state})
+        arrays = {path: (np.array(leaf) if leaf is not None else None)
+                  for path, leaf in flat}
+        return EngineSnapshot(
+            tick=self._tick,
+            arrays=arrays,
+            uid_counter=self.sched.last_uid,
+            queue=[tr.clone() for tr in self.sched.queue],
+            slots=[tr.clone() if tr is not None else None
+                   for tr in self.sched.slots],
+            outputs=dict(self._outputs),        # RequestOutput is frozen
+            buffers={uid: list(b) for uid, b in self._buffers.items()},
+            pending=list(self._pending),        # StreamEvent is frozen
+            retired=list(self._retired),
+            metrics=m.state(),
+            breaker=self.breaker.state(),
+            num_slots=self.ecfg.num_slots,
+            max_len=self.ecfg.max_len,
+        )
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Adopt a snapshot: the engine resumes exactly at the
+        snapshot's tick, mid-stream requests continue token-identically
+        (their PRNG keys, KV caches and sampling state all came along).
+        Requests in-flight across the restore are marked ``restored`` —
+        they finish with a ``...-after-restore`` annotated reason."""
+        if (snap.num_slots != self.ecfg.num_slots
+                or snap.max_len != self.ecfg.max_len):
+            raise ValueError(
+                f"snapshot geometry (slots={snap.num_slots}, "
+                f"max_len={snap.max_len}) does not match engine "
+                f"(slots={self.ecfg.num_slots}, max_len={self.ecfg.max_len})")
+        tree = ckpt_manager.unflatten_from_paths(dict(snap.arrays))
+
+        # adopt the cache leaves under THIS engine's pytree structure:
+        # the path format collapses list-vs-tuple, so unflatten against
+        # the live treedef (leaf order matches — both flatteners sort
+        # dict keys and keep sequence order)
+        t_leaves, treedef = jax.tree_util.tree_flatten(self.caches)
+        r_leaves = jax.tree_util.tree_leaves(tree["caches"])
+        if len(t_leaves) != len(r_leaves):
+            raise ValueError(
+                f"snapshot cache has {len(r_leaves)} leaves, engine cache "
+                f"has {len(t_leaves)} — incompatible model/cache geometry")
+        self.caches = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(r).astype(t.dtype)
+                      for t, r in zip(t_leaves, r_leaves)])
+
+        slot_state = tree["slots"]
+        for name in self._SLOT_STATE:
+            tmpl = getattr(self, name)
+            setattr(self, name,
+                    np.array(slot_state[name]).astype(tmpl.dtype))
+
+        self.sched.restore_state(snap.uid_counter, snap.queue, snap.slots)
+        for tr in self.sched.slots:
+            if tr is not None:
+                tr.restored = True
+        self._outputs = dict(snap.outputs)
+        self._buffers = {uid: deque(b) for uid, b in snap.buffers.items()}
+        self._pending = list(snap.pending)
+        self._retired = deque(snap.retired)
+        self.metrics_counters.restore(dict(snap.metrics))
+        self.metrics_counters.restores += 1
+        self.breaker.restore(snap.breaker)
+        self._tick = snap.tick
 
     # ------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, float]:

@@ -1,15 +1,22 @@
 """Engine observability: aggregate counters for the serving loop.
 
 One ``EngineMetrics`` instance lives on each ``Engine``; the engine
-increments it inline (submit / admit / prefill / decode / finish) and
-``Engine.metrics()`` returns ``snapshot()`` — a plain dict safe to log,
-JSON-serialize or emit as bench rows. The invariants tests pin:
+increments it inline (submit / admit / prefill / decode / finish /
+fault-recovery) and ``Engine.metrics()`` returns ``snapshot()`` — a
+plain dict safe to log, JSON-serialize or emit as bench rows. The
+invariants tests pin:
 
-  tokens_generated == prefills + decode_slot_steps
+  tokens_generated == prefills + decode_slot_steps - poisoned_slot_steps
                    == number of token-bearing StreamEvents
-  finished         == finished_stop + finished_length
+  finished         == finished_stop + finished_length + errors + timeouts
   submitted        == admitted + rejected + still queued/running
-"""
+
+The resilience counters (errors / timeouts / backend_fallbacks /
+snapshots / restores / straggler_steps / poisoned_slot_steps) are pinned
+consistent with emitted StreamEvents the same way the finish-reason
+totals are: every "error"/"timeout" terminal event increments exactly
+one counter here, every poisoned lane suppresses exactly one token
+event."""
 from __future__ import annotations
 
 import dataclasses
@@ -26,11 +33,18 @@ class EngineMetrics:
     finished: int = 0
     finished_stop: int = 0
     finished_length: int = 0
+    errors: int = 0                  # numerics-quarantined requests
+    timeouts: int = 0                # deadline_s / queue-TTL expiries
     prefills: int = 0
     prefill_prompt_tokens: int = 0
     decode_steps: int = 0
     decode_slot_steps: int = 0       # active lanes summed over decode steps
+    poisoned_slot_steps: int = 0     # lanes whose logits failed the finite check
     tokens_generated: int = 0
+    backend_fallbacks: int = 0       # planned-backend failures recovered by re-rank
+    snapshots: int = 0
+    restores: int = 0
+    straggler_steps: int = 0         # watchdog-flagged slow decode steps
     queue_wait_s: float = 0.0        # summed over admitted requests
     prefill_s: float = 0.0           # summed wall time of prefill calls
     decode_s: float = 0.0            # summed wall time of batched decode steps
@@ -38,10 +52,16 @@ class EngineMetrics:
 
     def count_finish(self, reason: str) -> None:
         self.finished += 1
-        if reason == "stop":
+        # a restore mid-flight annotates the reason but counts as its base
+        base = reason.replace("-after-restore", "")
+        if base == "stop":
             self.finished_stop += 1
-        elif reason == "length":
+        elif base == "length":
             self.finished_length += 1
+        elif base == "error":
+            self.errors += 1
+        elif base == "timeout":
+            self.timeouts += 1
         else:
             raise ValueError(f"not a finish reason for a served request: "
                              f"{reason!r}")
@@ -67,11 +87,21 @@ class EngineMetrics:
             return 0.0
         return self.tokens_generated / dt
 
+    def state(self) -> Dict[str, float]:
+        """The restorable counter fields (everything but the wall
+        clock), as used by Engine.snapshot()/restore()."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self) if f.name != "started_at"}
+
+    def restore(self, state: Dict[str, float]) -> None:
+        for name, value in state.items():
+            setattr(self, name, value)
+
     def snapshot(self) -> Dict[str, float]:
-        out = {f.name: getattr(self, f.name)
-               for f in dataclasses.fields(self) if f.name != "started_at"}
+        out = self.state()
         out["uptime_s"] = time.perf_counter() - self.started_at
         out["slot_occupancy"] = self.slot_occupancy
         out["decode_tokens_per_s"] = self.decode_tokens_per_s
         out["tokens_per_s"] = self.tokens_per_s
         return out
+

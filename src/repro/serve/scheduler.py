@@ -38,6 +38,7 @@ class TrackedRequest:
     prefill_s: float = 0.0
     decode_t0: float = 0.0           # set when the request joins decode
     done: bool = False
+    restored: bool = False           # was in flight across a snapshot restore
 
     @property
     def prompt_len(self) -> int:
@@ -46,6 +47,26 @@ class TrackedRequest:
     @property
     def stop_set(self) -> frozenset:
         return self.request.stop_set
+
+    @property
+    def deadline_t(self) -> Optional[float]:
+        """Absolute perf_counter deadline (None when the request has no
+        ``deadline_s``)."""
+        if self.request.deadline_s is None:
+            return None
+        return self.submit_t + self.request.deadline_s
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        dl = self.deadline_t
+        if dl is None:
+            return False
+        return (time.perf_counter() if now is None else now) > dl
+
+    def clone(self) -> "TrackedRequest":
+        """Snapshot copy: shares the frozen GenerationRequest, copies the
+        mutable generated list — a live engine mutating this record can
+        never corrupt an EngineSnapshot that holds the clone."""
+        return dataclasses.replace(self, generated=list(self.generated))
 
 
 class Scheduler:
@@ -92,6 +113,41 @@ class Scheduler:
 
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def prune_queue(self, predicate) -> List[TrackedRequest]:
+        """Remove (and return) queued requests matching ``predicate`` —
+        the deadline/TTL sweep drops expired requests before they are
+        admitted, so an already-dead request never wastes a prefill."""
+        kept: Deque[TrackedRequest] = deque()
+        removed: List[TrackedRequest] = []
+        for tr in self.queue:
+            (removed if predicate(tr) else kept).append(tr)
+        self.queue = kept
+        return removed
+
+    def drain_queue(self) -> List[TrackedRequest]:
+        """Empty the waiting queue (circuit-breaker trip: pending
+        requests are rejected cleanly instead of waiting on an engine
+        that will never serve them)."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    @property
+    def last_uid(self) -> int:
+        """Highest uid issued so far (uids are dense and 1-based, so a
+        uid is known iff ``1 <= uid <= last_uid``)."""
+        return self._uid
+
+    def restore_state(self, uid_counter: int, queue, slots) -> None:
+        """Adopt snapshot state (Engine.restore)."""
+        self._uid = uid_counter
+        self.queue = deque(tr.clone() for tr in queue)
+        if len(slots) != self.num_slots:
+            raise ValueError(
+                f"snapshot has {len(slots)} slots, engine has "
+                f"{self.num_slots}")
+        self.slots = [tr.clone() if tr is not None else None for tr in slots]
 
     def finish(self, slot: int) -> TrackedRequest:
         r = self.slots[slot]

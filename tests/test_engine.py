@@ -439,3 +439,49 @@ def test_engine_vq_quantized(setup):
                   EngineConfig(num_slots=3, max_len=24))
     got2 = eng2.generate(prompts, 4)
     assert list(got.values()) == list(got2.values())
+
+
+def test_mixed_batch_poison_bystander_token_identity(setup):
+    """A NaN/Inf-poisoned slot finishes ``finish_reason="error"`` while
+    every bystander lane — greedy AND sampled — streams on BIT-IDENTICAL
+    to a fault-free run: poison is additive per-lane data, so injection
+    neither retraces the decode step nor perturbs neighbor lanes."""
+    from repro.serve.resilience import FaultPlan, FaultSpec
+
+    cfg, model, params, rc = setup
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 6, 7)]
+    sampled = SamplingParams(greedy=False, temperature=1.3, seed=9)
+
+    def run(fault_plan):
+        eng = Engine(model, params, rc,
+                     EngineConfig(num_slots=3, max_len=32,
+                                  fault_plan=fault_plan))
+        uids = [
+            eng.submit(GenerationRequest(prompt=prompts[0],
+                                         max_new_tokens=6)),
+            eng.submit(GenerationRequest(prompt=prompts[1],
+                                         max_new_tokens=6,
+                                         sampling=sampled)),
+            eng.submit(GenerationRequest(prompt=prompts[2],
+                                         max_new_tokens=6)),
+        ]
+        _drain(eng)
+        return eng, uids
+
+    ref, runids = run(None)
+    eng, uids = run(FaultPlan.scripted(
+        FaultSpec("poison", tick=2, uid=3, mode="inf")))
+    bad = eng.output(uids[2])
+    assert bad.finish_reason == "error"
+    # the poisoned request's pre-fault prefix matches the clean run
+    assert bad.tokens == ref.output(runids[2]).tokens[: len(bad.tokens)]
+    for i in (0, 1):
+        assert eng.output(uids[i]).tokens == ref.output(runids[i]).tokens
+        assert eng.output(uids[i]).finish_reason == "length"
+    assert eng.trace_counts["decode"] == 1  # injection is data, not a retrace
+    m = eng.metrics()
+    assert m["errors"] == 1 and m["poisoned_slot_steps"] == 1
+    assert m["tokens_generated"] == (
+        m["prefills"] + m["decode_slot_steps"] - m["poisoned_slot_steps"])

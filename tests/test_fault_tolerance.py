@@ -60,6 +60,46 @@ class TestRestartDriver:
         with pytest.raises(RuntimeError, match="exceeded"):
             run_with_restarts(loop, max_restarts=2)
 
+    def test_on_failure_errors_propagate_unwrapped(self):
+        """A crash in the on_failure callback is a CONTROLLER bug, not a
+        training failure: it must propagate as-is — not wrapped in the
+        max-restarts RuntimeError, and without Python's implicit 'during
+        handling of the above exception' chaining."""
+        class ControllerBug(Exception):
+            pass
+
+        def loop(start):
+            raise RuntimeError("node lost")
+
+        def bad_callback(err, n):
+            raise ControllerBug("callback exploded")
+
+        with pytest.raises(ControllerBug) as exc_info:
+            run_with_restarts(loop, max_restarts=5, on_failure=bad_callback)
+        # no implicit chaining: the callback ran outside the except block
+        assert exc_info.value.__context__ is None
+
+    def test_last_resume_step_set_without_callback(self):
+        """Regression: last_resume_step was only updated when on_failure
+        was provided; the default path (resume at the same step) left it
+        stale at 0 even after restarts."""
+        calls = []
+
+        def loop(start):
+            calls.append(start)
+            if len(calls) < 2:
+                raise RuntimeError("node lost")
+            return 10
+
+        stats = run_with_restarts(loop, max_restarts=3)
+        assert stats.restarts == 1
+        assert stats.last_resume_step == 0 and calls == [0, 0]
+
+        calls.clear()
+        stats = run_with_restarts(loop, max_restarts=3,
+                                  on_failure=lambda e, n: 7)
+        assert stats.last_resume_step == 7 and calls == [0, 7]
+
 
 class TestEndToEndRecovery:
     def test_injected_failure_resumes_and_matches(self, tmp_path):

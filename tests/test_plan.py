@@ -514,6 +514,7 @@ class TestEnginePreplan:
             jnp.ones((2,), bool),
             jnp.full((2, serve_api.MAX_STOP_IDS), -1, jnp.int32),
             jnp.ones((2,), jnp.int32), jnp.ones((2,), bool),
+            jnp.zeros((2,), jnp.float32),  # per-lane fault-injection poison
         )
         after = planner.cache_info()
         # tracing plans each call site; every vq-leaf spec was pre-planned

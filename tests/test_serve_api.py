@@ -172,9 +172,36 @@ class TestSampleAndStop:
         stop_ids = stop_ids.at[1, 0].set(5)          # row 1 stops on 5
         remaining = jnp.asarray([4, 4, 1, 4], jnp.int32)  # row 2 out of budget
         active = jnp.asarray([True, True, True, False])   # row 3 inactive
-        tok, done, _ = sample_and_stop(
+        tok, done, bad, _ = sample_and_stop(
             logits, stop_ids=stop_ids, remaining=remaining, active=active,
             **st)
-        tok, done = np.asarray(tok), np.asarray(done)
+        tok, done, bad = np.asarray(tok), np.asarray(done), np.asarray(bad)
         np.testing.assert_array_equal(tok, [5, 5, 5, 0])  # inactive masked
         np.testing.assert_array_equal(done, [False, True, True, False])
+        # finite logits: no lane is flagged by the numerics check
+        np.testing.assert_array_equal(bad, [False] * 4)
+
+    def test_nonfinite_logits_flag_bad_not_done(self):
+        """The in-jit numerics quarantine mask: a NaN/Inf row flags bad
+        (active lanes only) and is masked OUT of done — one readback, one
+        disposition per lane. Healthy lanes are untouched."""
+        B, V = 4, 8
+        logits = jnp.tile(jax.nn.one_hot(5, V)[None] * 50.0, (B, 1))
+        logits = logits.at[1, 3].set(jnp.nan)    # active + poisoned
+        logits = logits.at[2, 0].set(jnp.inf)    # inactive + poisoned
+        st = _state(B)
+        st["greedy"] = jnp.ones((B,), bool)
+        stop_ids = jnp.full((B, api.MAX_STOP_IDS), -1, jnp.int32)
+        stop_ids = stop_ids.at[1, 0].set(5)      # would stop — but it's bad
+        remaining = jnp.asarray([4, 1, 4, 4], jnp.int32)
+        active = jnp.asarray([True, True, False, True])
+        tok, done, bad, _ = sample_and_stop(
+            logits, stop_ids=stop_ids, remaining=remaining, active=active,
+            **st)
+        done, bad = np.asarray(done), np.asarray(bad)
+        np.testing.assert_array_equal(bad, [False, True, False, False])
+        # the bad lane never reports done (stop hit AND budget exhausted
+        # there) — the engine quarantines it off the bad mask instead
+        np.testing.assert_array_equal(done, [False, False, False, False])
+        # bystander lanes' tokens are unaffected by the poisoned row
+        assert int(np.asarray(tok)[0]) == 5 and int(np.asarray(tok)[3]) == 5
