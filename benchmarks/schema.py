@@ -39,10 +39,13 @@ SCHEMA = "eva-bench-rows/v1"
 CALIBRATED_MODULES = ("measured", "smoke")
 COST_FIELDS = ("macs", "lookup_adds", "weight_bytes")
 
-# serving-engine throughput rows must carry the engine totals so the
-# serving trajectory stays machine-readable across PRs
+# serving-engine throughput rows must carry the engine totals — and the
+# KV memory accounting (serve/paging.py gauges; a contiguous engine
+# reports its constant worst-case kv_bytes_in_use and zero blocks) — so
+# the serving trajectory stays machine-readable across PRs
 SERVE_MODULES = ("serve",)
-SERVE_FIELDS = ("tokens", "tok_per_s", "requests")
+SERVE_FIELDS = ("tokens", "tok_per_s", "requests",
+                "kv_bytes_in_use", "blocks_in_use", "blocks_free")
 
 
 def _is_num(v: Any) -> bool:

@@ -26,26 +26,37 @@ from repro.serve import Engine, EngineConfig, GenerationRequest, SamplingParams
 def _metrics_fields(m, wall_s: float) -> str:
     # tok_per_s over the measured trace window (submit -> idle), NOT the
     # engine uptime — uptime includes construction/pre-planning, which
-    # would shift the tracked trajectory whenever startup cost changes
+    # would shift the tracked trajectory whenever startup cost changes.
+    # The KV memory gauges ride every row (schema.SERVE_FIELDS): a
+    # contiguous engine reports its constant worst-case kv_bytes_in_use
+    # and zero blocks, a paged one its pool accounting + peaks
     tok_per_s = m["tokens_generated"] / max(wall_s, 1e-9)
     return (f"tokens={m['tokens_generated']};tok_per_s={tok_per_s:.1f};"
             f"requests={m['finished']};decode_steps={m['decode_steps']};"
             f"occupancy={m['slot_occupancy']:.3f};"
-            f"prefills={m['prefills']};rejected={m['rejected']}")
+            f"prefills={m['prefills']};rejected={m['rejected']};"
+            f"kv_bytes_in_use={m['kv_bytes_in_use']};"
+            f"blocks_in_use={m['blocks_in_use']};"
+            f"blocks_free={m['blocks_free']};"
+            f"peak_blocks_in_use={m['peak_blocks_in_use']};"
+            f"peak_kv_bytes_in_use={m['peak_kv_bytes_in_use']};"
+            f"preemptions={m['preemptions']};"
+            f"prefill_chunks={m['prefill_chunks']}")
 
 
-def run(report):
-    cfg = dataclasses.replace(get_smoke_config("llama2_7b"), dtype="float32")
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.quantize(model.init(key), method="synthetic", key=key)
-    rc = RunConfig(mode="decode", remat=False,
-                   attn_chunk=16).replace_policy(vq_mode="eva")
-    eng = Engine(model, params, rc, EngineConfig(num_slots=2, max_len=32))
+def _trace(eng, reqs):
+    t0 = time.perf_counter()
+    uids = [eng.submit(r) for r in reqs]
+    events = []
+    while not eng.idle:
+        events.extend(eng.step())
+    wall = time.perf_counter() - t0
+    assert all(eng.output(u) is not None for u in uids)
+    return eng.metrics(), wall, events
 
-    rng = np.random.default_rng(0)
-    max_new = 6
-    reqs = [
+
+def _requests(cfg, rng, max_new):
+    return [
         GenerationRequest(  # greedy
             prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
             max_new_tokens=max_new),
@@ -59,14 +70,21 @@ def run(report):
             max_new_tokens=max_new, eos_ids=(3,),
             sampling=SamplingParams(greedy=False, top_p=0.9, seed=2)),
     ]
-    t0 = time.perf_counter()
-    uids = [eng.submit(r) for r in reqs]
-    events = []
-    while not eng.idle:
-        events.extend(eng.step())
-    wall = time.perf_counter() - t0
-    m = eng.metrics()
-    assert all(eng.output(u) is not None for u in uids)
+
+
+def run(report):
+    cfg = dataclasses.replace(get_smoke_config("llama2_7b"), dtype="float32")
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.quantize(model.init(key), method="synthetic", key=key)
+    rc = RunConfig(mode="decode", remat=False,
+                   attn_chunk=16).replace_policy(vq_mode="eva")
+    eng = Engine(model, params, rc, EngineConfig(num_slots=2, max_len=32))
+
+    rng = np.random.default_rng(0)
+    max_new = 6
+    reqs = _requests(cfg, rng, max_new)
+    m, wall, events = _trace(eng, reqs)
 
     tokens = m["tokens_generated"]
     report("serve/request_trace", wall * 1e6 / max(len(reqs), 1),
@@ -80,3 +98,13 @@ def run(report):
         report("serve/decode_step", m["decode_s"] * 1e6 / m["decode_steps"],
                f"{_metrics_fields(m, wall)};"
                f"decode_tok_per_s={m['decode_tokens_per_s']:.1f}")
+
+    # paged engine over the same trace (serve/paging.py): block-pool KV
+    # with chunked prefill; the row's gauges track pool behavior
+    eng_p = Engine(model, params, rc,
+                   EngineConfig(num_slots=2, max_len=32, paged=True,
+                                block_size=4, prefill_chunk=4))
+    mp, wall_p, events_p = _trace(eng_p, _requests(cfg, rng, max_new))
+    report("serve/paged_request_trace", wall_p * 1e6 / max(len(reqs), 1),
+           f"{_metrics_fields(mp, wall_p)};wall_us={wall_p*1e6:.0f};"
+           f"events={len(events_p)}")

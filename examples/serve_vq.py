@@ -9,6 +9,12 @@ stopping INSIDE the jitted step (the paper's multi-batch weight-tile
 reuse, Fig. 7(c)).
 
     PYTHONPATH=src python examples/serve_vq.py --arch mixtral-8x22b
+    PYTHONPATH=src python examples/serve_vq.py --paged --block-size 8
+
+With --paged the engine serves from the block-table KV memory
+subsystem (serve/paging.py): shared block arenas + per-slot tables,
+chunked prefill, and out-of-blocks preemption — token-identical to
+the contiguous layout.
 """
 import argparse
 import logging
@@ -33,6 +39,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--eos", type=int, default=None,
                     help="per-request stop token id")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-table KV memory (serve/paging.py)")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
 
     # INFO logging shows the engine's pre-planned per-bucket prefill and
@@ -46,7 +56,9 @@ def main():
     rc = RunConfig(mode="decode", plan_policy=PlanPolicy(vq_mode="eva"),
                    remat=False, attn_chunk=32)
     eng = Engine(model, params, rc,
-                 EngineConfig(num_slots=args.slots, max_len=64))
+                 EngineConfig(num_slots=args.slots, max_len=64,
+                              paged=args.paged, block_size=args.block_size,
+                              prefill_chunk=args.prefill_chunk))
 
     rng = np.random.default_rng(0)
     eos_ids = () if args.eos is None else (args.eos,)
@@ -85,6 +97,11 @@ def main():
           f"({m['tokens_generated']/dt:.1f} tok/s on CPU); "
           f"occupancy {m['slot_occupancy']:.2f}, "
           f"decode steps {m['decode_steps']}")
+    if args.paged:
+        print(f"  paged KV: peak {m['peak_blocks_in_use']} blocks "
+              f"({m['peak_kv_bytes_in_use']/1e6:.2f} MB), "
+              f"{m['prefill_chunks']} prefill chunks, "
+              f"{m['preemptions']} preemptions")
 
 
 if __name__ == "__main__":

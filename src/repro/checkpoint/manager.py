@@ -107,8 +107,13 @@ def _unflatten_from_paths(flat: Dict[str, Any]) -> Any:
 
 # Public aliases: the path-flattened format is also the serving engine's
 # snapshot wire format (serve/resilience.EngineSnapshot serializes KV
-# caches + per-slot sampling state through it), so the flatteners are
-# part of the module's API, not private helpers.
+# caches — contiguous or paged, where the "/caches/..." paths carry the
+# shared block arenas and device block-table leaves (serve/paging.py) —
+# plus per-slot sampling state through it), so the flatteners are part
+# of the module's API, not private helpers. The paging HOST state (block
+# tables, pool free-list order, per-slot ownership) rides EngineSnapshot
+# as plain Python fields alongside the scheduler queue: process-local,
+# not persisted here.
 flatten_with_paths = _flatten_with_paths
 unflatten_from_paths = _unflatten_from_paths
 

@@ -1,2 +1,2 @@
-from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ops import flash_decode, flash_decode_paged
 from repro.kernels.flash_decode.ref import flash_decode_ref

@@ -36,3 +36,32 @@ def flash_decode(
         o = flash_decode_pallas(q, k, v, lengths.astype(jnp.int32),
                                 block_s=bs, interpret=interpret)
     return o[:, None] if squeeze else o
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret", "use_pallas"))
+def flash_decode_paged(
+    q: jax.Array,            # (B, H, hd) or (B, 1, H, hd)
+    k_arena: jax.Array,      # (NB, bs, Hk, hd) shared block arena
+    v_arena: jax.Array,
+    block_table: jax.Array,  # (B, W) physical block ids (NB == sentinel)
+    lengths: jax.Array,      # (B,)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Flash decode over a paged KV cache (serve/paging.py): gather the
+    per-request contiguous view through the block table, then run the
+    unchanged kernel. ``W * bs`` equals the contiguous cache's time
+    length by construction, so outputs are token-identical to
+    ``flash_decode`` over the contiguous cache. Sentinel block ids clamp
+    to in-bounds garbage masked by ``lengths`` (``mode="clip"`` — the
+    default fill mode would inject NaN that survives masking)."""
+    B, W = block_table.shape
+    bs = k_arena.shape[1]
+    k = jnp.take(k_arena, block_table, axis=0, mode="clip").reshape(
+        (B, W * bs) + k_arena.shape[2:])
+    v = jnp.take(v_arena, block_table, axis=0, mode="clip").reshape(
+        (B, W * bs) + v_arena.shape[2:])
+    return flash_decode(q, k, v, lengths, block_s=block_s,
+                        interpret=interpret, use_pallas=use_pallas)

@@ -171,6 +171,26 @@ def make_serve_decode_step(model: Model, rc: RunConfig):
     return serve_decode_step
 
 
+def serve_cache_specs(model: Model, num_slots: int, max_len: int, *,
+                      paged: bool = False, block_size: int = 16,
+                      num_blocks: Optional[int] = None) -> Any:
+    """Cache ShapeDtypeStructs for lowering the serving decode step —
+    contiguous by default, or the paged layout (shared block arenas +
+    per-slot block tables, serve/paging.py) so a lowered
+    ``lower_serve_decode_step`` carries the block table as state. The
+    paged decode step still traces ONCE: table contents are data."""
+    if not paged:
+        return model.cache_specs(num_slots, max_len)
+    from repro.serve import paging
+
+    cfg = model.cfg
+    window = cfg.sliding_window or cfg.local_window
+    meta = paging.make_paging_config(model, num_slots, max_len,
+                                     window=window, block_size=block_size,
+                                     num_blocks=num_blocks)
+    return paging.paged_cache_specs(model, num_slots, max_len, meta)
+
+
 def serve_state_specs(batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStructs of the engine's per-slot sampling/stopping state
     (the extra inputs of ``make_serve_decode_step``)."""

@@ -401,6 +401,21 @@ def decode_attention(
 # ---------------------------------------------------------------------------
 
 
+def _paged_view(arena: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Gather a slot-contiguous view from a paged cache arena:
+    ``(NB, bs, F...)`` indexed by a ``(B, W)`` block table ->
+    ``(B, W*bs, F...)``. Sentinel ids (== NB) CLAMP to the last real
+    block (never ``mode="fill"``: NaN fill values survive ``0 * NaN``
+    through the masked softmax) — finite garbage the attention validity
+    mask (``pos < len``) zeroes out. ``W*bs`` equals the contiguous
+    cache's time length by construction (serve/paging.py), so
+    downstream attention math is unchanged."""
+    B, W = block_table.shape
+    bs = arena.shape[1]
+    view = jnp.take(arena, block_table, axis=0, mode="clip")
+    return view.reshape((B, W * bs) + arena.shape[2:])
+
+
 def _quantize_kv(x: jax.Array, dtype=jnp.int8):
     """Per-(token, head) symmetric int quantization of a K/V slice.
     x: (B, S, Hk, hd) -> (intN values, per-(B,S,Hk) scales)."""
@@ -467,7 +482,58 @@ def attention_fwd(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if rc.mode == "decode" and cache is not None and kv_source is None:
+    if (rc.mode == "decode" and cache is not None and kv_source is None
+            and "block_table" in cache):
+        # paged decode (serve/paging.py): scatter the new token through
+        # the slot's block table, attend over the gathered view. The
+        # view is shape-identical to the contiguous cache, so the same
+        # decode_attention / flash_decode math applies token-for-token;
+        # sentinel rows (freed / mid-prefill slots) drop the write.
+        bt = cache["block_table"]                      # (B, W)
+        bs_blk = cache["k"].shape[1]
+        Spage = bt.shape[1] * bs_blk
+        cache_len = cache["len"]                       # (B,)
+        slot = (cache_len % Spage) if window > 0 \
+            else jnp.minimum(cache_len, Spage - 1)
+        blk = jnp.take_along_axis(bt, (slot // bs_blk)[:, None],
+                                  axis=1)[:, 0]
+        off = slot % bs_blk
+        new_len = cache_len + 1
+        if "k_s" in cache:
+            cdt = cache["k"].dtype
+            kq, ks_ = _quantize_kv(k, cdt)
+            vq_, vs_ = _quantize_kv(v, cdt)
+            k_arena = cache["k"].at[blk, off].set(kq[:, 0], mode="drop")
+            v_arena = cache["v"].at[blk, off].set(vq_[:, 0], mode="drop")
+            ks_arena = cache["k_s"].at[blk, off].set(ks_[:, 0], mode="drop")
+            vs_arena = cache["v_s"].at[blk, off].set(vs_[:, 0], mode="drop")
+            k_view = (_paged_view(k_arena, bt).astype(jnp.bfloat16)
+                      * _paged_view(ks_arena, bt)[..., None].astype(jnp.bfloat16))
+            v_view = (_paged_view(v_arena, bt).astype(jnp.bfloat16)
+                      * _paged_view(vs_arena, bt)[..., None].astype(jnp.bfloat16))
+            o = decode_attention(q, k_view, v_view, new_len,
+                                 window=window, ring=window > 0)
+            new_cache = {"k": k_arena, "v": v_arena, "k_s": ks_arena,
+                         "v_s": vs_arena, "len": new_len,
+                         "block_table": bt}
+        else:
+            k_arena = cache["k"].at[blk, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            v_arena = cache["v"].at[blk, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            if rc.policy.impl == "pallas" and window == 0:
+                from repro.kernels.flash_decode import flash_decode_paged
+
+                o = flash_decode_paged(q, k_arena, v_arena, bt, new_len,
+                                       interpret=rc.policy.interpret)
+            else:
+                o = decode_attention(
+                    q, _paged_view(k_arena, bt), _paged_view(v_arena, bt),
+                    new_len, window=window, ring=window > 0,
+                )
+            new_cache = {"k": k_arena, "v": v_arena, "len": new_len,
+                         "block_table": bt}
+    elif rc.mode == "decode" and cache is not None and kv_source is None:
         # write the new token into the (ring) cache
         Sc = cache["k"].shape[1]
         cache_len = cache["len"]                       # (B,)
@@ -515,6 +581,49 @@ def attention_fwd(
         # cross-attention decode: static memory cache
         o = decode_attention(q, cache["k"], cache["v"], cache["len"])
         new_cache = cache
+    elif (cache is not None and "block_table" in cache
+          and kv_source is None):
+        # chunked-prefill continuation over a paged slot view
+        # (serve/paging.slot_view): scatter this chunk's K/V through the
+        # block table at their absolute positions, then attend over the
+        # gathered view with the query offset at the committed history
+        # length ``cache["len"]``. Pad positions beyond the chunk's true
+        # length (``cache["prefill_len"]``) route to the sentinel and
+        # drop, so bucket padding never corrupts committed prompt KV.
+        if rc.mode != "prefill":
+            raise ValueError(
+                "paged cache reached attention_fwd outside decode/prefill")
+        if "k_s" in cache:
+            raise NotImplementedError(
+                "chunked prefill over int8 KV caches is not supported")
+        if B != 1:
+            raise ValueError(
+                f"chunked-prefill continuation requires B == 1, got {B}")
+        bt = cache["block_table"]                      # (1, W)
+        bs_blk = cache["k"].shape[1]
+        W = bt.shape[1]
+        Spage = W * bs_blk
+        NB = cache["k"].shape[0]
+        hist = cache["len"]                            # (1,) committed len
+        true_c = cache["prefill_len"]                  # (1,) chunk true len
+        p0 = positions[0]                              # (S,) absolute
+        idx = jnp.arange(S)
+        valid = (idx < true_c[0]) & (p0 < Spage)
+        blk_ids = jnp.take(bt[0], jnp.clip(p0 // bs_blk, 0, W - 1))
+        phys = jnp.where(valid, blk_ids, NB)
+        off = p0 % bs_blk
+        k_arena = cache["k"].at[phys, off].set(
+            k[0].astype(cache["k"].dtype), mode="drop")
+        v_arena = cache["v"].at[phys, off].set(
+            v[0].astype(cache["v"].dtype), mode="drop")
+        # traced q_offset forbids the static chunk-skip schedule
+        o = blocked_attention(
+            q, _paged_view(k_arena, bt), _paged_view(v_arena, bt),
+            causal=causal, window=window, q_offset=hist[0],
+            chunk=rc.attn_chunk, skip_oob_chunks=False,
+        )
+        new_cache = {"k": k_arena, "v": v_arena, "len": hist + true_c,
+                     "block_table": bt, "prefill_len": true_c}
     else:
         o = blocked_attention(
             q, k, v,
@@ -588,17 +697,46 @@ def mla_fwd(
         return kk, vv
 
     new_cache = None
+    if (cache is not None and "block_table" in cache
+            and rc.mode != "decode"):
+        raise NotImplementedError(
+            "chunked prefill for MLA latent caches is not supported "
+            "(serve/engine.py gates chunking off for use_mla models)")
     if rc.mode == "decode" and cache is not None:
-        Sc = cache["latent"].shape[1]
         cache_len = cache["len"]
-        slot = jnp.minimum(cache_len, Sc - 1)
-        lat_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
-            cache["latent"], slot, latent.astype(cache["latent"].dtype).reshape(B, 1, r)
-        )
-        kr_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
-            cache["k_rope"], slot, k_rope.astype(cache["k_rope"].dtype).reshape(B, 1, dr)
-        )
         new_len = cache_len + 1
+        if "block_table" in cache:
+            # paged decode: scatter latent/k_rope through the block
+            # table, run the (absorbed or expanded) attention over the
+            # gathered view — same math, view shape == contiguous shape.
+            bt = cache["block_table"]                  # (B, W)
+            bs_blk = cache["latent"].shape[1]
+            Sc = bt.shape[1] * bs_blk
+            slot = jnp.minimum(cache_len, Sc - 1)
+            blk = jnp.take_along_axis(bt, (slot // bs_blk)[:, None],
+                                      axis=1)[:, 0]
+            off = slot % bs_blk
+            lat_arena = cache["latent"].at[blk, off].set(
+                latent.astype(cache["latent"].dtype).reshape(B, r),
+                mode="drop")
+            kr_arena = cache["k_rope"].at[blk, off].set(
+                k_rope.astype(cache["k_rope"].dtype).reshape(B, dr),
+                mode="drop")
+            lat_cache = _paged_view(lat_arena, bt)     # (B, Sc, r)
+            kr_cache = _paged_view(kr_arena, bt)       # (B, Sc, dr)
+            new_cache = {"latent": lat_arena, "k_rope": kr_arena,
+                         "len": new_len, "block_table": bt}
+        else:
+            Sc = cache["latent"].shape[1]
+            slot = jnp.minimum(cache_len, Sc - 1)
+            lat_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
+                cache["latent"], slot, latent.astype(cache["latent"].dtype).reshape(B, 1, r)
+            )
+            kr_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
+                cache["k_rope"], slot, k_rope.astype(cache["k_rope"].dtype).reshape(B, 1, dr)
+            )
+            new_cache = {"latent": lat_cache, "k_rope": kr_cache,
+                         "len": new_len}
         if rc.mla_absorb:
             # Weight-absorbed MLA (§Perf): attention runs in the latent
             # space — wkv_b is folded into the query/output sides so the
@@ -637,7 +775,6 @@ def mla_fwd(
             kk, vv = expand(lat_cache, kr_cache[:, :, None, :])
             qq = jnp.concatenate([q_nope, q_rope], axis=-1)   # (B,1,H,dn+dr)
             o = decode_attention(qq, kk, vv, new_len)
-        new_cache = {"latent": lat_cache, "k_rope": kr_cache, "len": new_len}
     else:
         kk, vv = expand(latent, k_rope)
         qq = jnp.concatenate([q_nope, q_rope], axis=-1)

@@ -301,6 +301,15 @@ def cache_pspecs(cache: Any, mesh: Mesh) -> Any:
 
     def walk(node, key=""):
         if isinstance(node, dict):
+            if "block_table" in node:
+                # paged cache node (serve/paging.py): arena axis 1 is the
+                # BLOCK POOL (NB), not batch, and the block table indexes
+                # it globally — sharding either would scatter a slot's
+                # blocks across ranks. Replicate both; only the per-slot
+                # ``len`` leaf keeps the batch rule.
+                return {k: (leaf_spec(k, v) if k == "len"
+                            else P(*([None] * v.ndim)))
+                        for k, v in node.items()}
             return {k: walk(v, k) for k, v in node.items()}
         if hasattr(node, "ndim"):
             return leaf_spec(key, node)

@@ -3,6 +3,10 @@ from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.kvcache import pad_prefill_cache, cache_bytes
 from repro.serve.metrics import EngineMetrics
+from repro.serve.paging import (BlockPool, PagingConfig, blocks_for_len,
+                                gather_block_view, init_contiguous_cache,
+                                init_paged_cache, make_paging_config,
+                                paged_cache_specs)
 from repro.serve.resilience import (CircuitBreaker, EngineSnapshot, FaultPlan,
                                     FaultSpec, InjectedFault,
                                     serve_with_restarts)

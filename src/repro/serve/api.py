@@ -231,6 +231,28 @@ def bucket_for(prompt_len: int, buckets: Tuple[int, ...]) -> int:
         f"prompt length {prompt_len} exceeds the largest bucket {buckets[-1]}")
 
 
+def chunk_spans(prompt_len: int, chunk: int,
+                buckets: Tuple[int, ...] = ()) -> List[Tuple[int, int, int]]:
+    """The ``(start, length, bucket)`` spans chunked prefill splits a
+    prompt into: ``chunk``-sized pieces (last one ragged), each padded to
+    its bucket when bucketing is on (``bucket == length`` otherwise).
+    Mirrors the engine's per-tick chunk walk (serve/engine.py
+    ``_prefill_one``) so schedulers/benchmarks can predict the device
+    call sequence without an engine instance."""
+    if prompt_len < 1:
+        raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    spans: List[Tuple[int, int, int]] = []
+    pos = 0
+    while pos < prompt_len:
+        c = min(chunk, prompt_len - pos)
+        b = bucket_for(c, buckets) if buckets else c
+        spans.append((pos, c, b))
+        pos += c
+    return spans
+
+
 # ---------------------------------------------------------------------------
 # In-jit batched sampling / stopping
 # ---------------------------------------------------------------------------

@@ -51,9 +51,10 @@ from repro.models.api import Model
 from repro.models.common import RunConfig
 from repro.runtime.fault_tolerance import StepWatchdog
 from repro.serve import api
+from repro.serve import paging
 from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
                              SamplingParams, StreamEvent)
-from repro.serve.kvcache import pad_prefill_cache
+from repro.serve.kvcache import cache_bytes, pad_prefill_cache
 from repro.serve.metrics import EngineMetrics
 from repro.serve.resilience import (CircuitBreaker, EngineSnapshot, FaultPlan,
                                     InjectedFault)
@@ -106,6 +107,22 @@ class EngineConfig:
     straggler_threshold: float = 3.0
     # scripted fault schedule for tests/chaos drills; None in production
     fault_plan: Optional[FaultPlan] = None
+    # ---- paged KV memory (serve/paging.py) ----
+    # paged=True swaps the per-slot contiguous cache for shared block
+    # arenas + per-slot block tables: admission allocates blocks for the
+    # prompt, decode grows one block at a time, finish recycles — so
+    # memory tracks ACTUAL sequence lengths and an out-of-blocks decode
+    # step preempts the youngest request back to the queue instead of
+    # failing
+    paged: bool = False
+    block_size: int = 16               # tokens per block (gcd-snapped)
+    # pool size; None -> num_slots * blocks_per_slot (contiguous parity)
+    num_blocks: Optional[int] = None
+    # chunked prefill: prompts longer than this admit as several engine
+    # ticks (one bucketed chunk each) interleaved with decode; None
+    # disables. Only effective for paged + bucketed attention families
+    # with window == 0 and no MLA (the continuation path's support set)
+    prefill_chunk: Optional[int] = None
 
 
 class Engine:
@@ -119,8 +136,36 @@ class Engine:
         self.sched = Scheduler(ecfg.num_slots, max_queue=ecfg.max_queue)
         cfg = model.cfg
         self.window = cfg.sliding_window or cfg.local_window
-        self.caches = model.init_cache(ecfg.num_slots, ecfg.max_len)
         self.metrics_counters = EngineMetrics(num_slots=ecfg.num_slots)
+        if ecfg.paged:
+            self.paging: Optional[paging.PagingConfig] = \
+                paging.make_paging_config(
+                    model, ecfg.num_slots, ecfg.max_len, window=self.window,
+                    block_size=ecfg.block_size, num_blocks=ecfg.num_blocks)
+            self.caches = paging.init_paged_cache(
+                model, ecfg.num_slots, ecfg.max_len, self.paging)
+            self.pool: Optional[paging.BlockPool] = \
+                paging.BlockPool(self.paging.num_blocks)
+            # host-side source of truth: per-slot block rows + owned ids;
+            # the device mirror (set_block_tables) lags until _sync_tables
+            self.tables = np.full(
+                (ecfg.num_slots, self.paging.blocks_per_slot),
+                self.paging.sentinel, np.int32)
+            self._owned: List[List[int]] = [[] for _ in range(ecfg.num_slots)]
+            self._tables_dirty = True
+            self._update_kv_gauges()
+        else:
+            self.paging = None
+            self.pool = None
+            self.tables = None
+            self._owned = []
+            self._tables_dirty = False
+            self.caches = paging.init_contiguous_cache(
+                model, ecfg.num_slots, ecfg.max_len)
+            # contiguous allocation is worst-case and constant
+            self.metrics_counters.kv_bytes_in_use = cache_bytes(self.caches)
+            self.metrics_counters.peak_kv_bytes_in_use = \
+                self.metrics_counters.kv_bytes_in_use
 
         B = ecfg.num_slots
         # per-slot decode state: every per-request sampling/stopping knob
@@ -145,7 +190,7 @@ class Engine:
 
         # trace-counting harness: these tick only when jax (re)traces the
         # python body — tests pin decode==1 and prefill<=len(buckets)
-        self.trace_counts = {"decode": 0, "prefill": 0}
+        self.trace_counts = {"decode": 0, "prefill": 0, "prefill_chunk": 0}
 
         # resilience state: engine tick counter (FaultPlan schedule / the
         # snapshot resume point), numerics circuit breaker and the decode
@@ -161,6 +206,12 @@ class Engine:
         self._buckets = (api.prefill_buckets(ecfg.max_len,
                                              ecfg.min_prefill_bucket)
                          if self._bucketed else ())
+        # chunked prefill runs model.forward over a slot_view — supported
+        # for the bucketable attention families with a full (non-ring)
+        # cache and no MLA latent path (models/common.py gates the same)
+        self._chunked = bool(
+            ecfg.paged and ecfg.prefill_chunk and self._bucketed
+            and self.window == 0 and not getattr(cfg, "use_mla", False))
 
         # Pre-plan at the exact execution shapes. Decode always runs at
         # M = num_slots tokens in flight; bucketed prefill runs at exactly
@@ -202,6 +253,13 @@ class Engine:
             functools.partial(self._prefill_impl,
                               rc=self.rc.replace(mode="prefill")),
         )
+        if ecfg.paged:
+            self._paged_prefill_fn = jax.jit(
+                functools.partial(self._paged_prefill_impl,
+                                  rc=self.rc.replace(mode="prefill")))
+            self._chunk_fn = jax.jit(
+                functools.partial(self._prefill_chunk_impl,
+                                  rc=self.rc.replace(mode="prefill")))
         # prefill extras (whisper frames / vision embeds), batched once
         self._extra_batch = {
             k: (v[None] if getattr(v, "ndim", 0) == 2 else v[:1])
@@ -222,6 +280,12 @@ class Engine:
         if self.window == 0 and need > self.ecfg.max_len:
             return (f"prompt_len + max_new_tokens - 1 = {need} exceeds the "
                     f"cache capacity max_len={self.ecfg.max_len}")
+        if self.paging is not None:
+            peak = self.paging.blocks_for(need)
+            if peak > self.paging.num_blocks:
+                return (f"request needs {peak} KV blocks at peak, the pool "
+                        f"only has {self.paging.num_blocks} "
+                        f"(EngineConfig.num_blocks)")
         return None
 
     def submit(self, request: GenerationRequest) -> int:
@@ -307,11 +371,88 @@ class Engine:
                                   window=self.window, true_len=true_len)
         return tok[0], bad, new_key[0], cache
 
-    def _prefill_one(self, slot: int, tr: TrackedRequest) -> "tuple[int, bool]":
-        """Prefill the admitted request into ``slot``. Returns
-        ``(first_token, bad)`` — ``bad`` means the sampled logits row
-        failed the finite check (injected or organic NaN/Inf): the slot
-        is NOT activated and the caller quarantines the request."""
+    def _paged_prefill_impl(self, params, caches, tokens, true_len, slot,
+                            bt_row, key, temperature, top_k, top_p, greedy,
+                            poison, extras, *, rc):
+        """Jitted paged prefill (first/only chunk): same forward + sample
+        as ``_prefill_impl``, but the fresh cache commits by scattering
+        through ``slot``'s block-table row into the shared arenas
+        (paging.write_prefill_into_blocks) instead of a contiguous slot
+        insert. ``slot``/``bt_row``/``true_len`` are traced — one trace
+        per bucket, shared by every slot."""
+        self.trace_counts["prefill"] += 1
+        batch = {"tokens": tokens}
+        batch.update(extras)
+        logits, fresh = self.model.prefill(params, batch, rc)
+        last = jax.lax.dynamic_slice_in_dim(
+            logits[0], true_len - 1, 1, axis=0)[0]
+        last = last[: self.model.cfg.vocab_size][None] + poison
+        bad = ~jnp.all(jnp.isfinite(last.astype(jnp.float32)))
+        tok, new_key = api.sample_tokens(
+            last, key[None], temperature[None], top_k[None], top_p[None],
+            greedy[None])
+        caches = paging.write_prefill_into_blocks(
+            caches, fresh, slot, bt_row, true_len, self.paging,
+            window=self.window)
+        return tok[0], bad, new_key[0], caches
+
+    def _prefill_chunk_impl(self, params, caches, tokens, hist, true_len,
+                            slot, bt_row, key, temperature, top_k, top_p,
+                            greedy, poison, extras, *, rc):
+        """Jitted chunked-prefill CONTINUATION (``hist`` committed
+        positions already in the slot's blocks): run model.forward in
+        prefill mode over a single-slot view of the paged cache at
+        absolute positions ``hist + [0, S)``; attention_fwd's paged
+        continuation branch scatters the chunk's KV and attends over the
+        gathered history. The sampled token only matters on the FINAL
+        chunk (the engine discards it otherwise)."""
+        self.trace_counts["prefill_chunk"] += 1
+        S = tokens.shape[1]
+        view = paging.slot_view(caches, slot, bt_row, hist, true_len)
+        batch = {"tokens": tokens,
+                 "positions": hist + jnp.arange(S, dtype=jnp.int32)[None]}
+        batch.update(extras)
+        logits, new_view = self.model.forward(params, batch, rc, caches=view)
+        last = jax.lax.dynamic_slice_in_dim(
+            logits[0], true_len - 1, 1, axis=0)[0]
+        last = last[: self.model.cfg.vocab_size][None] + poison
+        bad = ~jnp.all(jnp.isfinite(last.astype(jnp.float32)))
+        tok, new_key = api.sample_tokens(
+            last, key[None], temperature[None], top_k[None], top_p[None],
+            greedy[None])
+        caches = paging.merge_slot(caches, new_view, slot)
+        return tok[0], bad, new_key[0], caches
+
+    def _prefill_target(self, tr: TrackedRequest) -> int:
+        """Positions to prefill before ``slot`` can (re)join decode: the
+        prompt, plus the already-generated tokens minus one for a
+        preempted request (the last generated token becomes the resume
+        decode input, not cache history)."""
+        if tr.preempted and tr.generated:
+            return tr.prompt_len + len(tr.generated) - 1
+        return tr.prompt_len
+
+    def _prefill_tokens(self, tr: TrackedRequest) -> np.ndarray:
+        seq = np.asarray(tr.request.prompt, np.int32)
+        if tr.preempted and len(tr.generated) > 1:
+            seq = np.concatenate(
+                [seq, np.asarray(tr.generated[:-1], np.int32)])
+        return seq
+
+    def _prefill_one(self, slot: int, tr: TrackedRequest
+                     ) -> "tuple[Optional[int], bool, bool]":
+        """Advance the request in ``slot`` by one prefill step — the
+        whole prompt in one call, or (chunked prefill) the next
+        ``prefill_chunk``-sized piece. Returns ``(token, bad, final)``:
+
+        * ``final=False`` — a non-final chunk committed; the slot stays
+          occupied-but-inactive and the next tick continues.
+        * ``bad=True`` — the sampled logits row failed the finite check:
+          the slot is NOT activated and the caller quarantines.
+        * ``token`` — the first sampled token on the final step, or None
+          for non-final chunks and for preempted-request resumes (their
+          re-sampled token is discarded; decode state restores from the
+          eviction record instead, keeping the stream token-identical)."""
         if self.fault_plan is not None:
             spec = self.fault_plan.poll("prefill", self._tick, tr.uid)
             if spec is not None:
@@ -323,47 +464,185 @@ class Engine:
                 poison = float("nan") if spec.mode == "nan" else float("inf")
         req = tr.request
         sp = req.sampling
-        L = req.prompt_len
-        prompt = req.prompt
+        target = self._prefill_target(tr)
+        chunked = self._chunked and target > int(self.ecfg.prefill_chunk)
+        pos0 = tr.prefill_pos
+        c = min(int(self.ecfg.prefill_chunk), target - pos0) if chunked \
+            else target
+        final = pos0 + c >= target
+        chunk = self._prefill_tokens(tr)[pos0: pos0 + c]
         if self._bucketed:
-            bucket = api.bucket_for(L, self._buckets)
-            if bucket > L:
+            bucket = api.bucket_for(c, self._buckets)
+            if bucket > c:
                 # edge-pad: the value is causally masked for real rows,
                 # and repeating the last token keeps stub models (that
                 # read tokens[:, -1]) meaningful in tests
-                prompt = np.pad(prompt, (0, bucket - L), mode="edge")
+                chunk = np.pad(chunk, (0, bucket - c), mode="edge")
         key = jax.random.PRNGKey(sp.seed)
-        tok, bad, new_key, cache = self._prefill_fn(
-            self.params, jnp.asarray(prompt[None], jnp.int32),
-            jnp.asarray(L, jnp.int32), jnp.asarray(key),
+        sample_args = (
+            jnp.asarray(key),
             jnp.asarray(sp.temperature, jnp.float32),
             jnp.asarray(sp.top_k, jnp.int32),
             jnp.asarray(sp.top_p, jnp.float32),
             jnp.asarray(sp.greedy),
             jnp.asarray(poison, jnp.float32), self._extra_batch,
         )
+        toks_dev = jnp.asarray(chunk[None], jnp.int32)
+        true_c = jnp.asarray(c, jnp.int32)
+        if self.paging is None:
+            tok, bad, new_key, cache = self._prefill_fn(
+                self.params, toks_dev, true_c, *sample_args)
+        elif pos0 == 0:
+            tok, bad, new_key, new_caches = self._paged_prefill_fn(
+                self.params, self.caches, toks_dev, true_c,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(self.tables[slot]),
+                *sample_args)
+        else:
+            tok, bad, new_key, new_caches = self._chunk_fn(
+                self.params, self.caches, toks_dev,
+                jnp.asarray(pos0, jnp.int32), true_c,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(self.tables[slot]),
+                *sample_args)
+            self.metrics_counters.prefill_chunks += 1
         tok, bad = int(tok), bool(bad)
         if bad:
             # quarantine: never activate the slot, never stream the
-            # garbage token — the caller finishes with "error"
-            return tok, True
-        self.caches = _insert_slot(self.caches, cache, slot)
-        tr.generated.append(tok)
+            # garbage token — the caller finishes with "error" (which
+            # also recycles any blocks committed by earlier chunks)
+            return tok, True, final
+        if self.paging is None:
+            self.caches = _insert_slot(self.caches, cache, slot)
+        else:
+            self.caches = new_caches
+        tr.prefill_pos = pos0 + c
+        if not final:
+            return None, False, False
 
         # per-slot decode state for this request
         stop = sorted(req.stop_set)
-        self.positions[slot] = L
-        self.last_token[slot] = tok
-        self.rng_keys[slot] = np.asarray(new_key)
+        self.positions[slot] = target
         self.temperature[slot] = sp.temperature
         self.top_k[slot] = sp.top_k
         self.top_p[slot] = sp.top_p
         self.greedy[slot] = sp.greedy
         self.stop_ids[slot, :] = -1
         self.stop_ids[slot, : len(stop)] = stop
-        self.remaining[slot] = req.max_new_tokens - 1
         self.active[slot] = True
-        return tok, False
+        self._tables_dirty = self.paging is not None
+        if tr.preempted and tr.generated:
+            # preemption resume: the re-sampled token is a duplicate of
+            # history — restore the decode state saved at eviction so
+            # the continuation is token-identical to an uninterrupted run
+            self.last_token[slot] = tr.generated[-1]
+            self.rng_keys[slot] = np.asarray(tr.resume_key)
+            self.remaining[slot] = tr.resume_remaining
+            tr.preempted = False
+            return None, False, True
+        tr.generated.append(tok)
+        self.last_token[slot] = tok
+        self.rng_keys[slot] = np.asarray(new_key)
+        self.remaining[slot] = req.max_new_tokens - 1
+        return tok, False, True
+
+    # ------------------------------------------------------- paged KV blocks
+    def _update_kv_gauges(self) -> None:
+        m = self.metrics_counters
+        used = self.pool.used_count
+        m.blocks_in_use = used
+        m.blocks_free = self.pool.free_count
+        m.kv_bytes_in_use = used * self.paging.bytes_per_block
+        m.peak_blocks_in_use = max(m.peak_blocks_in_use, used)
+        m.peak_kv_bytes_in_use = max(m.peak_kv_bytes_in_use,
+                                     m.kv_bytes_in_use)
+
+    def _alloc_blocks(self, slot: int, n: int) -> bool:
+        """Grow ``slot`` by ``n`` pool blocks (all-or-nothing)."""
+        if n <= 0:
+            return True
+        blks = self.pool.alloc(n)
+        if blks is None:
+            return False
+        start = len(self._owned[slot])
+        self._owned[slot].extend(blks)
+        self.tables[slot, start: start + len(blks)] = blks
+        self._tables_dirty = True
+        self._update_kv_gauges()
+        return True
+
+    def _free_blocks(self, slot: int) -> None:
+        """Recycle every block ``slot`` owns and sentinel its table row."""
+        if self._owned[slot]:
+            self.pool.free(self._owned[slot])
+            self._owned[slot] = []
+        self.tables[slot, :] = self.paging.sentinel
+        self._tables_dirty = True
+        self._update_kv_gauges()
+
+    def _sync_tables(self) -> None:
+        """Push the host block tables to the device cache mirror before a
+        batched decode step. Non-ACTIVE rows (free slots AND mid-prefill
+        slots, which own blocks but must not receive interleaved decode
+        writes) are masked to the sentinel, so the one traced decode step
+        serves any live/dead/mid-prefill mix."""
+        if self.paging is None or not self._tables_dirty:
+            return
+        masked = np.where(self.active[:, None], self.tables,
+                          self.paging.sentinel).astype(np.int32)
+        self.caches = paging.set_block_tables(self.caches, masked)
+        self._tables_dirty = False
+
+    def _preempt_victim(self) -> Optional[int]:
+        """The youngest (highest-uid) active slot whose resume prefill
+        still fits ``max_len`` — preempting it frees blocks NOW and the
+        request remains servable later. None when nothing qualifies."""
+        best = None
+        for b in np.nonzero(self.active)[0]:
+            tr = self.sched.slots[int(b)]
+            resume = tr.prompt_len + max(0, len(tr.generated) - 1)
+            if resume > self.ecfg.max_len:
+                continue
+            if best is None or tr.uid > self.sched.slots[best].uid:
+                best = int(b)
+        return best
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` mid-decode: save its decode state on the
+        tracked request, recycle its blocks, and push it back to the
+        QUEUE HEAD. It resumes by re-prefilling prompt ++ generated[:-1]
+        and restoring the saved PRNG key/budget — token-identical to an
+        uninterrupted run, just later."""
+        tr = self.sched.slots[slot]
+        tr.resume_key = np.array(self.rng_keys[slot], copy=True)
+        tr.resume_remaining = int(self.remaining[slot])
+        tr.preempted = True
+        tr.prefill_pos = 0
+        self.active[slot] = False
+        self.sched.slots[slot] = None
+        self.sched.queue.appendleft(tr)
+        self._free_blocks(slot)
+        self.metrics_counters.preemptions += 1
+        log.info("request %d preempted out of slot %d (out of KV blocks); "
+                 "re-queued at head with %d tokens generated",
+                 tr.uid, slot, len(tr.generated))
+
+    def _grow_decode_blocks(self) -> None:
+        """Before a batched decode step, make sure every active slot owns
+        blocks for the position it is about to write. An exhausted pool
+        preempts the youngest active request (possibly the one that
+        needs the block) until the write fits."""
+        for b in np.nonzero(self.active)[0]:
+            b = int(b)
+            while self.active[b]:
+                need = self.paging.blocks_for(int(self.positions[b]) + 1)
+                short = need - len(self._owned[b])
+                if short <= 0 or self._alloc_blocks(b, short):
+                    break
+                victim = self._preempt_victim()
+                if victim is None:  # pragma: no cover - defensive
+                    raise RuntimeError(
+                        "out of KV blocks with no preemptible request; "
+                        "raise EngineConfig.num_blocks")
+                self._preempt(victim)
 
     # -------------------------------------------------------------- decode
     def _decode_impl(self, params, caches, tokens, positions, keys,
@@ -388,6 +667,56 @@ class Engine:
             remaining=remaining, active=active)
         return tok, done, bad, new_keys, new_caches
 
+    def _prefill_step_events(self, slot: int,
+                             events: List[StreamEvent]) -> bool:
+        """Run one prefill step for ``slot`` (a whole prompt, one chunk,
+        or a preemption-resume re-prefill) and translate the outcome into
+        events + metrics. Returns True when the step poisoned.
+
+        Counter discipline (keeps the EngineMetrics invariants exact):
+        ``prefills`` ticks when a step emits a first token or poisons;
+        non-final chunks tick ``prefill_chunks`` only, and a good
+        preemption resume ticks neither (its token was already counted
+        before eviction — ``preemptions`` observes the event)."""
+        m = self.metrics_counters
+        tr = self.sched.slots[slot]
+        now = time.perf_counter()
+        pos0 = tr.prefill_pos
+        tok, bad, final = self._prefill_one(slot, tr)
+        dt = time.perf_counter() - now
+        tr.prefill_s += dt
+        m.prefill_s += dt
+        m.prefill_prompt_tokens += tr.prefill_pos - pos0
+        if bad:
+            # numerics quarantine straight out of prefill: the garbage
+            # token is suppressed, the request errors (and any blocks
+            # committed by earlier chunks recycle via _finish_slot)
+            m.prefills += 1
+            m.poisoned_slot_steps += 1
+            events.append(StreamEvent(tr.uid, 0, None, "error"))
+            self._finish_slot(slot, "error")
+            return True
+        if not final:
+            return False
+        tr.decode_t0 = time.perf_counter()
+        if tok is None:
+            # preemption resume rejoins decode silently: its next token
+            # continues the stream exactly where eviction cut it
+            return False
+        m.prefills += 1
+        m.tokens_generated += 1
+        # stop-set token straight out of prefill / budget of one:
+        # retire before the request joins a decode batch at all
+        reason = None
+        if tok in tr.stop_set:
+            reason = "stop"
+        elif tr.request.max_new_tokens == 1:
+            reason = "length"
+        events.append(StreamEvent(tr.uid, 0, tok, reason))
+        if reason is not None:
+            self._finish_slot(slot, reason)
+        return False
+
     # ---------------------------------------------------------------- step
     def _timeout_sweep(self) -> List[StreamEvent]:
         """Enforce per-request ``deadline_s`` and the engine queue TTL
@@ -405,9 +734,11 @@ class Engine:
 
         for tr in self.sched.prune_queue(dead_in_queue):
             m.count_finish("timeout")
+            # a preempted request waiting to resume may already hold
+            # streamed tokens — the terminal output must carry them
             self._outputs[tr.uid] = RequestOutput(
-                uid=tr.uid, tokens=(), finish_reason="timeout",
-                queue_wait_s=now - tr.submit_t)
+                uid=tr.uid, tokens=tuple(tr.generated),
+                finish_reason="timeout", queue_wait_s=now - tr.submit_t)
             events.append(StreamEvent(tr.uid, -1, None, "timeout"))
             self._retain(tr.uid)
         for b in list(self.sched.active_slots()):
@@ -459,42 +790,51 @@ class Engine:
 
         any_poisoned = False
         did_work = False
-        for slot in self.sched.admit():
+
+        # advance mid-prefill (chunked) slots one chunk each before
+        # admitting more work: occupied-but-inactive marks mid-prefill
+        for slot in self.sched.active_slots():
+            if self.active[slot]:
+                continue
+            did_work = True
+            any_poisoned |= self._prefill_step_events(slot, events)
+
+        # paged admission reserves pool blocks for each candidate's full
+        # prefill target; Scheduler.admit stops at the first refusal
+        planned_free = self.pool.free_count if self.paging is not None else 0
+
+        def can_admit(tr: TrackedRequest) -> bool:
+            nonlocal planned_free
+            if self.paging is None:
+                return True
+            need = self.paging.blocks_for(self._prefill_target(tr))
+            if need > planned_free:
+                return False
+            planned_free -= need
+            return True
+
+        for slot in self.sched.admit(can_admit):
             tr = self.sched.slots[slot]
             did_work = True
             now = time.perf_counter()
             tr.queue_wait_s = now - tr.submit_t
             m.admitted += 1
             m.queue_wait_s += tr.queue_wait_s
-            tok, bad = self._prefill_one(slot, tr)
-            tr.prefill_s = time.perf_counter() - now
-            tr.decode_t0 = time.perf_counter()
-            m.prefills += 1
-            m.prefill_prompt_tokens += tr.prompt_len
-            m.prefill_s += tr.prefill_s
-            if bad:
-                # numerics quarantine straight out of prefill: the
-                # garbage first token is suppressed, the request errors
-                m.poisoned_slot_steps += 1
-                any_poisoned = True
-                events.append(StreamEvent(tr.uid, 0, None, "error"))
-                self._finish_slot(slot, "error")
-                continue
-            m.tokens_generated += 1
-            # stop-set token straight out of prefill / budget of one:
-            # retire before the request joins a decode batch at all
-            reason = None
-            if tok in tr.stop_set:
-                reason = "stop"
-            elif tr.request.max_new_tokens == 1:
-                reason = "length"
-            events.append(StreamEvent(tr.uid, 0, tok, reason))
-            if reason is not None:
-                self._finish_slot(slot, reason)
+            if self.paging is not None:
+                need = self.paging.blocks_for(self._prefill_target(tr))
+                ok = self._alloc_blocks(slot, need)
+                assert ok, "can_admit reserved blocks the pool cannot supply"
+            any_poisoned |= self._prefill_step_events(slot, events)
+
+        # every active slot must own blocks for the position this decode
+        # step writes; an exhausted pool preempts the youngest request
+        if self.paging is not None and np.any(self.active):
+            self._grow_decode_blocks()
 
         active_idx = np.nonzero(self.active)[0]
         if active_idx.size:
             did_work = True
+            self._sync_tables()
             if fp is not None and fp.poll("decode", tick) is not None:
                 raise InjectedFault("decode", tick)
             poison = np.zeros((self.ecfg.num_slots,), np.float32)
@@ -612,6 +952,13 @@ class Engine:
         self._prefill_fn = jax.jit(
             functools.partial(self._prefill_impl,
                               rc=self.rc.replace(mode="prefill")))
+        if self.ecfg.paged:
+            self._paged_prefill_fn = jax.jit(
+                functools.partial(self._paged_prefill_impl,
+                                  rc=self.rc.replace(mode="prefill")))
+            self._chunk_fn = jax.jit(
+                functools.partial(self._prefill_chunk_impl,
+                                  rc=self.rc.replace(mode="prefill")))
         self.plans["decode"] = plan_mod.preplan_params(
             self.params, self.rc.policy, mode="decode",
             m=self.ecfg.num_slots, act_dtype=self.model.cfg.act_dtype)
@@ -619,6 +966,8 @@ class Engine:
     def _finish_slot(self, slot: int, reason: str) -> TrackedRequest:
         tr = self.sched.finish(slot)
         self.active[slot] = False
+        if self.paging is not None:
+            self._free_blocks(slot)
         # a request that crossed a snapshot restore mid-flight finishes
         # with an annotated reason: the tokens are token-identical, the
         # client can still SEE that delivery crossed a failover
@@ -747,6 +1096,11 @@ class Engine:
             breaker=self.breaker.state(),
             num_slots=self.ecfg.num_slots,
             max_len=self.ecfg.max_len,
+            paged=self.paging is not None,
+            block_size=self.paging.block_size if self.paging else 0,
+            num_blocks=self.paging.num_blocks if self.paging else 0,
+            **(paging.paged_state(self.tables, self.pool, self._owned)
+               if self.paging is not None else {}),
         )
 
     def restore(self, snap: EngineSnapshot) -> None:
@@ -761,6 +1115,19 @@ class Engine:
                 f"snapshot geometry (slots={snap.num_slots}, "
                 f"max_len={snap.max_len}) does not match engine "
                 f"(slots={self.ecfg.num_slots}, max_len={self.ecfg.max_len})")
+        snap_paged = getattr(snap, "paged", False)
+        if snap_paged != (self.paging is not None):
+            raise ValueError(
+                f"snapshot paged={snap_paged} does not match engine "
+                f"paged={self.paging is not None}")
+        if self.paging is not None and (
+                snap.block_size != self.paging.block_size
+                or snap.num_blocks != self.paging.num_blocks):
+            raise ValueError(
+                f"snapshot paging geometry (block_size={snap.block_size}, "
+                f"num_blocks={snap.num_blocks}) does not match engine "
+                f"(block_size={self.paging.block_size}, "
+                f"num_blocks={self.paging.num_blocks})")
         tree = ckpt_manager.unflatten_from_paths(dict(snap.arrays))
 
         # adopt the cache leaves under THIS engine's pytree structure:
@@ -782,6 +1149,13 @@ class Engine:
             tmpl = getattr(self, name)
             setattr(self, name,
                     np.array(slot_state[name]).astype(tmpl.dtype))
+
+        if self.paging is not None:
+            self.tables = np.array(snap.block_tables, np.int32)
+            self.pool.restore(snap.pool_free)
+            self._owned = [list(o) for o in snap.owned]
+            self._tables_dirty = True
+            self._update_kv_gauges()
 
         self.sched.restore_state(snap.uid_counter, snap.queue, snap.slots)
         for tr in self.sched.slots:

@@ -59,15 +59,25 @@ def _to_ring_dynamic(x: jax.Array, axis: int, ring: int,
                      true_len: jax.Array) -> jax.Array:
     """``_to_ring`` with a traced number of real positions: the cache's
     static time length is the prefill bucket, only the first ``true_len``
-    entries are real. Slots past ``true_len`` hold clipped garbage — the
-    decode attention mask (``pos < len``) hides them until they are
-    overwritten in ring order."""
+    entries are real.
+
+    Ring slots past ``min(true_len, ring)`` hold no real position and
+    are ZEROED. (They used to hold ``jnp.clip``-duplicated garbage —
+    masked by decode attention, but nondeterministic junk that broke
+    paged/contiguous bit-comparisons and could alias real positions at
+    ``true_len == 0``. Edge cases pinned by tests/test_kvcache.py:
+    ``true_len == 0`` -> all zeros, ``true_len == ring`` -> exactly the
+    first ``ring`` positions in ring order.)"""
     S = x.shape[axis]
     s = jnp.arange(ring)
     wrapped = true_len - ring + ((s - true_len) % ring)
     pos = jnp.where(true_len <= ring, s, wrapped)
     pos = jnp.clip(pos, 0, S - 1)
-    return jnp.take(x, pos, axis=axis)
+    out = jnp.take(x, pos, axis=axis)
+    valid = s < jnp.minimum(true_len, ring)
+    shape = [1] * out.ndim
+    shape[axis] = ring
+    return jnp.where(valid.reshape(shape), out, jnp.zeros_like(out))
 
 
 def pad_prefill_cache(cache: Any, capacity: int, *, window: int = 0,

@@ -37,6 +37,15 @@ class EngineMetrics:
     timeouts: int = 0                # deadline_s / queue-TTL expiries
     prefills: int = 0
     prefill_prompt_tokens: int = 0
+    prefill_chunks: int = 0          # chunked-prefill device calls (paged)
+    preemptions: int = 0             # out-of-blocks decode evictions (paged)
+    # KV memory gauges (paged engines update these on every block
+    # alloc/free; contiguous engines set kv_bytes_in_use once at init)
+    kv_bytes_in_use: int = 0
+    blocks_in_use: int = 0
+    blocks_free: int = 0
+    peak_blocks_in_use: int = 0
+    peak_kv_bytes_in_use: int = 0
     decode_steps: int = 0
     decode_slot_steps: int = 0       # active lanes summed over decode steps
     poisoned_slot_steps: int = 0     # lanes whose logits failed the finite check

@@ -1,0 +1,509 @@
+"""Paged KV-cache memory subsystem (block pool + block tables).
+
+The contiguous serving cache pays worst-case memory up front: one
+``max_len``-capacity time axis per slot, whether a request uses 64
+tokens or 8192. With EVA's 2-bit weights the KV cache — not weights —
+bounds concurrent users per chip (PAPER.md §VII), so serving memory has
+to scale with *actual* sequence lengths. This module provides the
+vLLM-style alternative:
+
+  * ``BlockPool``     — a host-side free list over ``num_blocks``
+                        physical blocks. One *block* spans
+                        ``block_size`` token positions across EVERY
+                        pageable cache leaf of EVERY layer/group: a
+                        single physical block id is valid simultaneously
+                        in all arenas, so allocation is one integer per
+                        ``block_size`` tokens, not per-leaf bookkeeping.
+  * block-table leaf  — every pageable cache node swaps its per-slot
+                        contiguous time axis ``(B, S, ...)`` for a
+                        shared arena ``(num_blocks, block_size, ...)``
+                        plus a ``block_table`` leaf ``(B, W)`` of
+                        physical block ids (logical block ``j`` of slot
+                        ``b`` lives at ``arena[table[b, j]]``).
+  * gather/scatter    — ``gather_block_view`` materializes the
+                        per-slot contiguous view from the arena;
+                        decode/prefill writes scatter through the table
+                        with the OOB-sentinel trick below.
+
+Pageable node kinds (same detection convention as kvcache.py):
+  {"k","v","len"[,"k_s","v_s"]}   attention (time axis -3; scales -2)
+  {"latent","k_rope","len"}       MLA latent cache (time axis -2)
+Everything else (recurrent h/conv states, xLSTM states, whisper/vision
+cross-attention memories) is *pass-through*: fixed-size per-slot state
+kept at its contiguous ``(..., B, ...)`` shape.
+
+Jit-stability and the sentinel id
+---------------------------------
+The sentinel block id is ``num_blocks`` — one past the arena. Scatters
+go through ``.at[...].set(..., mode="drop")`` so writes routed to the
+sentinel vanish, and gathers through ``jnp.take`` (clamp mode) so reads
+of the sentinel return in-bounds garbage that the attention validity
+mask (``pos < len``) never exposes. Freed or inactive slots simply get
+sentinel rows in the device table: the *same* traced decode step serves
+any mix of live/dead/mid-prefill slots with no retrace.
+
+Bit-identity with the contiguous path
+-------------------------------------
+``block_size`` is constrained to divide ``page_len`` (falling back to
+``gcd(block_size, page_len)``), so the gathered view is exactly
+``(B, page_len, ...)`` — the same shape, same values at valid positions,
+as the contiguous cache. Paged decode therefore reuses the *identical*
+attention arithmetic (models/common.py) and produces token-identical
+samples; tests/test_paging.py pins this per family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kvcache import _to_ring_dynamic
+
+# Leaf names making up a pageable attention node and their time axes
+# (negative, from the right — leaves carry leading scan/batch axes).
+_ATTN_TIME_AXES = {"k": -3, "v": -3, "k_s": -2, "v_s": -2}
+_MLA_TIME_AXES = {"latent": -2, "k_rope": -2}
+
+
+def _is_attn_node(node: dict) -> bool:
+    return "k" in node and "v" in node and "len" in node
+
+
+def _is_mla_node(node: dict) -> bool:
+    return "latent" in node and "k_rope" in node
+
+
+def effective_block_size(block_size: int, page_len: int) -> int:
+    """Largest divisor of ``page_len`` that is <= the requested block
+    size (via gcd). Divisibility is what makes the gathered block view
+    exactly ``page_len`` long — the contiguous shapes — so the paged
+    path can reuse the contiguous attention math bit-for-bit."""
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    if page_len % block_size == 0:
+        return block_size
+    return math.gcd(block_size, page_len)
+
+
+def blocks_for_len(n: int, *, block_size: int, page_len: int) -> int:
+    """Blocks needed to hold ``n`` cached token positions.
+
+    Capped at ``ceil(page_len / block_size)``: a ring/SWA cache wraps at
+    ``page_len = min(max_len, window)`` and must never allocate beyond
+    the ring (ISSUE 8 satellite — a windowed cache needs at most
+    ``ceil(window/block_size)`` blocks)."""
+    n = min(max(n, 0), page_len)
+    return -(-n // block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingConfig:
+    """Static geometry of a paged cache (derived, not user state)."""
+
+    block_size: int        # effective tokens per block (divides page_len)
+    num_blocks: int        # physical blocks in the shared pool
+    page_len: int          # per-slot logical capacity (= contiguous S)
+    blocks_per_slot: int   # W = page_len // block_size
+    bytes_per_block: int   # summed across every arena leaf
+    sentinel: int          # = num_blocks; OOB id whose writes drop
+
+    def blocks_for(self, n: int) -> int:
+        return blocks_for_len(n, block_size=self.block_size,
+                              page_len=self.page_len)
+
+
+class BlockPool:
+    """Host-side LIFO free list over physical block ids.
+
+    Deterministic: ``alloc`` after ``free`` of the same ids hands the
+    ids back in reverse-free order, so a snapshot/restore of
+    ``state()`` reproduces the exact allocation sequence (paged decode
+    is then token- AND layout-identical across restores)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        self.num_blocks = num_blocks
+        # pop() from the tail -> ids come out 0, 1, 2, ...
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._free_set = set(self._free)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing: ``n`` block ids, or None when the pool can't
+        satisfy the request (caller preempts / defers admission)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if not (0 <= b < self.num_blocks):
+                raise ValueError(f"block id {b} out of range "
+                                 f"[0, {self.num_blocks})")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+            self._free_set.add(b)
+
+    def state(self) -> Tuple[int, ...]:
+        return tuple(self._free)
+
+    def restore(self, free: Sequence[int]) -> None:
+        free = [int(b) for b in free]
+        if len(set(free)) != len(free):
+            raise ValueError("pool snapshot contains duplicate block ids")
+        for b in free:
+            if not (0 <= b < self.num_blocks):
+                raise ValueError(f"pool snapshot block id {b} out of range")
+        self._free = free
+        self._free_set = set(free)
+
+
+def make_paging_config(model, num_slots: int, max_len: int, *,
+                       window: int = 0, block_size: int = 16,
+                       num_blocks: Optional[int] = None,
+                       kv_int8: bool = False,
+                       kv_int4: bool = False) -> PagingConfig:
+    """Derive the pool geometry for ``model`` at the given slot count.
+
+    ``page_len`` mirrors what init_cache allocates per slot:
+    ``min(max_len, window)`` for ring/SWA caches, else ``max_len``.
+    ``num_blocks`` defaults to ``num_slots * blocks_per_slot`` — same
+    worst-case capacity as the contiguous cache, but now *shared*, so
+    short requests free headroom for long ones."""
+    page_len = min(max_len, window) if window else max_len
+    bs = effective_block_size(block_size, page_len)
+    W = page_len // bs
+    if num_blocks is None:
+        num_blocks = num_slots * W
+    if num_blocks < W:
+        raise ValueError(
+            f"num_blocks={num_blocks} cannot hold even one full slot "
+            f"(blocks_per_slot={W})")
+
+    specs = model.cache_specs(num_slots, max_len,
+                              kv_int8=kv_int8, kv_int4=kv_int4)
+    per_block = 0
+
+    def walk(node):
+        nonlocal per_block
+        if not isinstance(node, dict):
+            return
+        axes = (_ATTN_TIME_AXES if _is_attn_node(node)
+                else _MLA_TIME_AXES if _is_mla_node(node) else None)
+        if axes is None:
+            for v in node.values():
+                walk(v)
+            return
+        for name, t in axes.items():
+            if name not in node:
+                continue
+            leaf = node[name]
+            B, S = leaf.shape[t - 1], leaf.shape[t]
+            per_block += (leaf.size // (B * S)) * bs * leaf.dtype.itemsize
+
+    walk(specs)
+    return PagingConfig(block_size=bs, num_blocks=num_blocks,
+                        page_len=page_len, blocks_per_slot=W,
+                        bytes_per_block=per_block, sentinel=num_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_contiguous_cache(model, num_slots: int, max_len: int,
+                          **kwargs) -> Any:
+    """The classic per-slot contiguous decode cache. All serving-side
+    cache allocation routes through this module (CI grep-lints direct
+    ``init_cache(num_slots, max_len)`` calls elsewhere in serve/)."""
+    return model.init_cache(num_slots, max_len, **kwargs)
+
+
+def _arena_shape(shape: Tuple[int, ...], t: int, meta: PagingConfig
+                 ) -> Tuple[int, ...]:
+    """(..., B, S, ...) at time axis ``t`` -> (..., NB, bs, ...)."""
+    t = t % len(shape)
+    return shape[:t - 1] + (meta.num_blocks, meta.block_size) + shape[t + 1:]
+
+
+def init_paged_cache(model, num_slots: int, max_len: int,
+                     meta: PagingConfig, *, kv_int8: bool = False,
+                     kv_int4: bool = False) -> Any:
+    """Build the paged decode cache: pageable nodes get shared arenas +
+    a sentinel-filled ``block_table`` leaf, pass-through nodes keep
+    their contiguous per-slot shapes (zero-initialized; prefill insert
+    overwrites the slot rows before anything reads them)."""
+    specs = model.cache_specs(num_slots, max_len,
+                              kv_int8=kv_int8, kv_int4=kv_int4)
+
+    def page_node(node, axes):
+        out = {}
+        for name, leaf in node.items():
+            t = axes.get(name)
+            if t is None:  # "len" and any future scalar bookkeeping
+                out[name] = jnp.zeros(leaf.shape, leaf.dtype)
+                continue
+            S = leaf.shape[t]
+            if S != meta.page_len:
+                raise ValueError(
+                    f"cache leaf {name!r} has time length {S}, paging "
+                    f"geometry expects page_len={meta.page_len}")
+            out[name] = jnp.zeros(_arena_shape(leaf.shape, t, meta),
+                                  leaf.dtype)
+        lead = node["len"].shape[:-1]
+        B = node["len"].shape[-1]
+        out["block_table"] = jnp.full(
+            lead + (B, meta.blocks_per_slot), meta.sentinel, jnp.int32)
+        return out
+
+    def walk(node):
+        if isinstance(node, dict):
+            if _is_attn_node(node):
+                return page_node(node, _ATTN_TIME_AXES)
+            if _is_mla_node(node):
+                return page_node(node, _MLA_TIME_AXES)
+            return {k: walk(v) for k, v in node.items()}
+        return jnp.zeros(node.shape, node.dtype)
+
+    return walk(specs)
+
+
+def paged_cache_specs(model, num_slots: int, max_len: int,
+                      meta: PagingConfig, *, kv_int8: bool = False,
+                      kv_int4: bool = False) -> Any:
+    """Shape/dtype tree of the paged cache without allocating it (the
+    lowered serve step — launch/steps.py — carries it as state)."""
+    return jax.eval_shape(
+        lambda: init_paged_cache(model, num_slots, max_len, meta,
+                                 kv_int8=kv_int8, kv_int4=kv_int4))
+
+
+def is_paged(caches: Any) -> bool:
+    """True when the cache tree contains at least one block table."""
+    found = False
+
+    def walk(node):
+        nonlocal found
+        if isinstance(node, dict):
+            if "block_table" in node:
+                found = True
+                return
+            for v in node.values():
+                walk(v)
+
+    walk(caches)
+    return found
+
+
+# ---------------------------------------------------------------------------
+# Device-side table + slot plumbing
+# ---------------------------------------------------------------------------
+
+
+def set_block_tables(caches: Any, tables: np.ndarray) -> Any:
+    """Replace every ``block_table`` leaf with ``tables`` (B, W)
+    broadcast across the leading scan axes. The engine masks inactive
+    slots' rows to the sentinel *before* calling this, so interleaved
+    decode writes for freed/mid-prefill slots drop harmlessly."""
+    dev = jnp.asarray(tables, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {k: walk(v) for k, v in node.items()}
+            if "block_table" in node:
+                bt = node["block_table"]
+                out["block_table"] = jnp.broadcast_to(
+                    dev, bt.shape).astype(jnp.int32)
+            return out
+        return node
+
+    return walk(caches)
+
+
+def slot_view(caches: Any, slot, bt_row, hist, chunk_true) -> Any:
+    """A single-slot (B=1) view of the paged cache for one chunked-
+    prefill step. Pageable nodes share the arenas and get this slot's
+    block-table row, ``len`` forced to the *host-tracked* committed
+    length ``hist`` (the device leaf is corrupted by interleaved decode
+    steps incrementing all lanes — never trust it mid-prefill), and an
+    extra ``prefill_len`` leaf carrying the chunk's true length into
+    attention_fwd (whose signature can't grow). Pass-through leaves are
+    dynamic-sliced at the slot's batch row (axis 1 after the leading
+    scan axis — the bucketable families all use that layout).
+
+    Only valid for the chunk-continuation families (dense / whisper /
+    vision, window == 0); the engine gates accordingly."""
+    bt_row = jnp.asarray(bt_row, jnp.int32)
+
+    def page_node(node):
+        out = {}
+        for name, leaf in node.items():
+            if name == "block_table":
+                out[name] = jnp.broadcast_to(
+                    bt_row[None], leaf.shape[:-2] + (1,) + leaf.shape[-1:]
+                ).astype(jnp.int32)
+            elif name == "len":
+                out[name] = jnp.full(leaf.shape[:-1] + (1,), hist,
+                                     leaf.dtype)
+            else:
+                out[name] = leaf  # shared arena
+        out["prefill_len"] = jnp.full(
+            node["len"].shape[:-1] + (1,), chunk_true, jnp.int32)
+        return out
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "block_table" in node:
+                return page_node(node)
+            return {k: walk(v) for k, v in node.items()}
+        return jax.lax.dynamic_slice_in_dim(node, slot, 1, axis=1)
+
+    return walk(caches)
+
+
+def merge_slot(caches: Any, new_caches: Any, slot) -> Any:
+    """Fold the outputs of a chunked-prefill step (over a ``slot_view``)
+    back into the full cache. Arena leaves are taken wholesale (the
+    scatter already wrote through shared storage), the full block-table
+    leaf is kept from the OLD tree (the view's row is slot-local), the
+    transient ``prefill_len`` leaf is dropped, and ``len`` + every
+    pass-through leaf are dynamic-update-sliced into the slot's batch
+    row (updates smaller than capacity anchor at 0, matching how the
+    engine's contiguous ``_insert_slot`` already behaves)."""
+
+    def page_node(old, new):
+        out = {}
+        for name, leaf in old.items():
+            if name == "block_table":
+                out[name] = leaf
+            elif name == "len":
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, new[name].astype(leaf.dtype), slot, axis=1)
+            else:
+                out[name] = new[name]
+        return out
+
+    def walk(old, new):
+        if isinstance(old, dict):
+            if "block_table" in old:
+                return page_node(old, new)
+            return {k: walk(v, new[k]) for k, v in old.items()}
+        return jax.lax.dynamic_update_slice_in_dim(
+            old, new.astype(old.dtype), slot, axis=1)
+
+    return walk(caches, new_caches)
+
+
+def write_prefill_into_blocks(caches: Any, fresh: Any, slot, bt_row,
+                              true_len, meta: PagingConfig, *,
+                              window: int = 0) -> Any:
+    """Commit a fresh single-request (B=1) prefill cache into the paged
+    tree — the paged analogue of ``kvcache.pad_prefill_cache`` +
+    ``_insert_slot``.
+
+    Pageable leaves scatter their first ``true_len`` positions through
+    ``bt_row`` (ring-converted first when ``window > 0``, so a prompt
+    longer than the window lands in ring order and never needs more
+    than ``blocks_per_slot`` blocks); positions beyond ``true_len``
+    route to the sentinel and drop. ``len`` becomes ``true_len``.
+    Pass-through leaves are dynamic-update-sliced into the slot row."""
+    bt_row = jnp.asarray(bt_row, jnp.int32)
+    bs, W, NB = meta.block_size, meta.blocks_per_slot, meta.sentinel
+
+    def scatter(arena, vals, n_valid, P):
+        # vals: (..., P, F...) with the leading scan axes intact; the
+        # time axis sits right after them (fresh leaves are squeezed at
+        # batch below), so index (lead..., phys, off) lines up with the
+        # arena's (lead..., NB, bs, F...) layout.
+        i = jnp.arange(P)
+        phys = jnp.where(i < n_valid,
+                         bt_row[jnp.clip(i // bs, 0, W - 1)], NB)
+        off = i % bs
+        idx = (slice(None),) * (arena.ndim - 2 - (vals.ndim - 2)) \
+            + (phys, off)
+        return arena.at[idx].set(vals.astype(arena.dtype), mode="drop")
+
+    def page_node(old, new, axes):
+        out = {}
+        for name, leaf in old.items():
+            if name == "block_table":
+                out[name] = leaf
+                continue
+            if name == "len":
+                upd = jnp.full(leaf.shape[:-1] + (1,), true_len,
+                               leaf.dtype)
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, upd, slot, axis=1)
+                continue
+            t = axes[name]
+            x = new[name]
+            if window:
+                x = _to_ring_dynamic(x, x.ndim + t, meta.page_len,
+                                     true_len)
+            n_valid = jnp.minimum(true_len, meta.page_len)
+            P = x.shape[x.ndim + t]
+            # squeeze the B=1 batch axis (just before the time axis)
+            vals = jax.lax.index_in_dim(x, 0, axis=x.ndim + t - 1,
+                                        keepdims=False)
+            out[name] = scatter(leaf, vals, n_valid, P)
+        return out
+
+    def walk(old, new):
+        if isinstance(old, dict):
+            if _is_attn_node(old) and "block_table" in old:
+                return page_node(old, new, _ATTN_TIME_AXES)
+            if _is_mla_node(old) and "block_table" in old:
+                return page_node(old, new, _MLA_TIME_AXES)
+            return {k: walk(v, new[k]) for k, v in old.items()}
+        return jax.lax.dynamic_update_slice_in_dim(
+            old, new.astype(old.dtype), slot, axis=1)
+
+    return walk(caches, fresh)
+
+
+def gather_block_view(arena: jax.Array, block_table: jax.Array,
+                      view_len: Optional[int] = None) -> jax.Array:
+    """Materialize the per-slot contiguous view: ``(B, W)`` table over a
+    ``(NB, bs, F...)`` arena -> ``(B, W*bs, F...)``. Sentinel ids clamp
+    (``mode="clip"`` — never NaN-fill, which would survive masked
+    softmax as ``0 * NaN``) to in-bounds garbage that the caller's
+    validity mask hides. With ``W*bs == page_len`` this is shape- and
+    value-identical (at valid positions) to the contiguous cache — the
+    foundation of the paged path's token-identity guarantee."""
+    B, W = block_table.shape
+    bs = arena.shape[1]
+    view = jnp.take(arena, block_table, axis=0, mode="clip")
+    view = view.reshape((B, W * bs) + arena.shape[2:])
+    if view_len is not None:
+        view = view[:, :view_len]
+    return view
+
+
+def paged_state(tables: np.ndarray, pool: BlockPool,
+                owned: Sequence[Sequence[int]]
+                ) -> Dict[str, Any]:
+    """Host-side paging state for EngineSnapshot (arenas + device block
+    tables already ride the snapshot's ``/caches/...`` arrays)."""
+    return {
+        "block_tables": np.array(tables, dtype=np.int32, copy=True),
+        "pool_free": pool.state(),
+        "owned": tuple(tuple(int(b) for b in o) for o in owned),
+    }

@@ -234,6 +234,15 @@ class EngineSnapshot:
     breaker: Tuple[int, int, bool]
     num_slots: int
     max_len: int
+    # ---- paged-KV state (serve/paging.py; defaults keep old snapshots
+    # loadable by contiguous engines) ----
+    paged: bool = False
+    block_size: int = 0
+    num_blocks: int = 0
+    block_tables: Optional[np.ndarray] = None      # (num_slots, W) host copy
+    pool_free: Optional[Tuple[int, ...]] = None    # BlockPool free list
+    # per-slot owned block ids, allocation order (tuple of tuples)
+    owned: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def checkpoint_state(self) -> Dict[str, Any]:
         """The array state as a CheckpointManager ``state`` group dict

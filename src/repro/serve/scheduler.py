@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Any, Callable, Deque, List, Optional
 
 from repro.serve.api import GenerationRequest
 
@@ -39,6 +39,14 @@ class TrackedRequest:
     decode_t0: float = 0.0           # set when the request joins decode
     done: bool = False
     restored: bool = False           # was in flight across a snapshot restore
+    # ---- paged-engine state (serve/paging.py) ----
+    # committed prefill positions; > 0 marks a mid-prefill (chunked) slot
+    prefill_pos: int = 0
+    # evicted out of a slot by an out-of-blocks decode step; resumes by
+    # re-prefilling prompt ++ generated[:-1] with the saved decode state
+    preempted: bool = False
+    resume_key: Optional[Any] = None         # (2,) uint32 PRNG key
+    resume_remaining: int = 0                # decode budget at eviction
 
     @property
     def prompt_len(self) -> int:
@@ -100,14 +108,35 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
-    def admit(self) -> List[int]:
+    def admit(self, can_admit: Optional[Callable[[TrackedRequest], bool]]
+              = None) -> List[int]:
         """Move queued requests into free slots; returns slot indices that
-        need prefill."""
+        need prefill.
+
+        Ordering is earliest-deadline-first: the queued request with the
+        nearest absolute deadline is admitted first; requests without a
+        deadline rank behind all deadlined ones, FIFO among themselves
+        (preempted requests re-enter at the queue head, so they also
+        resume first within their deadline class).
+
+        ``can_admit`` (the paged engine's block-budget predicate) gates
+        each candidate; admission STOPS at the first refusal rather than
+        skipping to a smaller request behind it — no head-of-line bypass
+        means a large request cannot be starved forever."""
         admitted = []
         for i in self.free_slots():
             if not self.queue:
                 break
-            self.slots[i] = self.queue.popleft()
+            best = min(
+                range(len(self.queue)),
+                key=lambda j: (self.queue[j].deadline_t
+                               if self.queue[j].deadline_t is not None
+                               else float("inf"), j))
+            tr = self.queue[best]
+            if can_admit is not None and not can_admit(tr):
+                break
+            del self.queue[best]
+            self.slots[i] = tr
             admitted.append(i)
         return admitted
 

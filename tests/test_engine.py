@@ -86,6 +86,37 @@ def test_scheduler_slot_lifecycle():
     assert u2 != u3
 
 
+def test_scheduler_admits_earliest_deadline_first():
+    """EDF admission: the queued request with the nearest absolute
+    deadline wins the free slot; no-deadline requests rank behind all
+    deadlined ones, FIFO among themselves."""
+    s = Scheduler(num_slots=1)
+    req = lambda dl: GenerationRequest(prompt=np.ones(3, np.int32),
+                                       max_new_tokens=2, deadline_s=dl)
+    ua = s.submit(req(None))
+    ub = s.submit(req(60.0))
+    uc = s.submit(req(5.0))
+    assert s.slots[s.admit()[0]].uid == uc  # tightest deadline first
+    s.finish(0)
+    assert s.slots[s.admit()[0]].uid == ub
+    s.finish(0)
+    assert s.slots[s.admit()[0]].uid == ua
+
+
+def test_scheduler_admit_predicate_stops_without_bypass():
+    """A can_admit refusal (the paged engine's block budget) stops the
+    admission sweep instead of skipping to a smaller request behind the
+    refused one — no head-of-line bypass, so large requests can't
+    starve."""
+    s = Scheduler(num_slots=2)
+    big = GenerationRequest(prompt=np.ones(20, np.int32), max_new_tokens=2)
+    small = GenerationRequest(prompt=np.ones(3, np.int32), max_new_tokens=2)
+    s.submit(big), s.submit(small)
+    admitted = s.admit(lambda tr: len(tr.request.prompt) < 10)
+    assert admitted == [] and len(s.queue) == 2
+    assert s.admit() and s.slots[0].request is big  # budget freed: FIFO
+
+
 def test_scheduler_queue_bound():
     """The waiting queue is bounded: submit raises QueueFull at max_queue
     instead of growing the deque without limit."""

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serve.kvcache import pad_prefill_cache
+from repro.serve.kvcache import _to_ring_dynamic, pad_prefill_cache
 
 
 def _attn_cache(S, B=1, Hk=2, hd=4, int8=False, seed=0):
@@ -159,3 +159,40 @@ class TestDynamicTrueLen:
                                 true_len=jnp.asarray(5, jnp.int32))
         np.testing.assert_array_equal(np.asarray(out["rec"]["h"]), 1)
         assert out["rec"]["conv"].shape == (1, 3, 4)
+
+
+class TestToRingDynamicEdges:
+    """Regression pins for the _to_ring_dynamic zero-fill fix: slots
+    holding no real position used to carry clip-duplicated garbage that
+    broke paged/contiguous bit-comparisons (serve/paging.py relies on
+    byte-equal rings) and aliased position 0 at true_len == 0."""
+
+    def _x(self, S=16, F=3):
+        return jnp.asarray(
+            np.arange(S * F, dtype=np.float32).reshape(1, S, F))
+
+    def test_true_len_zero_is_all_zeros(self):
+        out = _to_ring_dynamic(self._x(), 1, 8, jnp.asarray(0, jnp.int32))
+        assert out.shape[1] == 8
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_true_len_equals_ring_is_identity_prefix(self):
+        x = self._x()
+        out = _to_ring_dynamic(x, 1, 8, jnp.asarray(8, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(x[:, :8]))
+
+    def test_partial_fill_zeroes_tail(self):
+        x = self._x()
+        out = _to_ring_dynamic(x, 1, 8, jnp.asarray(5, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out[:, :5]),
+                                      np.asarray(x[:, :5]))
+        np.testing.assert_array_equal(np.asarray(out[:, 5:]), 0.0)
+
+    def test_wrapped_matches_decode_slot_rule(self):
+        x, ring, L = self._x(), 8, 13
+        out = _to_ring_dynamic(x, 1, ring, jnp.asarray(L, jnp.int32))
+        for s in range(ring):
+            newest = max(p for p in range(L) if p % ring == s)
+            np.testing.assert_array_equal(np.asarray(out[:, s]),
+                                          np.asarray(x[:, newest]))

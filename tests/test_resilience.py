@@ -252,6 +252,7 @@ class TestDeadlines:
 
         eng._decode_fn = slow
         ua = eng.submit(_req(5, 200))
+        eng.step()  # A takes the slot BEFORE B enters the EDF queue
         ub = eng.submit(_req(9, 4, deadline_s=0.02))
         evs = list(eng.stream(ub))
         assert len(evs) == 1 and evs[0].token is None
