@@ -18,9 +18,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.vq import KVQuantConfig
 from repro.models import build_model
 from repro.models.common import RunConfig
-from repro.serve import Engine, EngineConfig, GenerationRequest, SamplingParams
+from repro.serve import (Engine, EngineConfig, GenerationRequest,
+                         SamplingParams, make_paging_config)
 
 
 def _metrics_fields(m, wall_s: float) -> str:
@@ -108,3 +110,25 @@ def run(report):
     report("serve/paged_request_trace", wall_p * 1e6 / max(len(reqs), 1),
            f"{_metrics_fields(mp, wall_p)};wall_us={wall_p*1e6:.0f};"
            f"events={len(events_p)}")
+
+    # KV-VQ engine (kv_bits=4, paged): the same trace served over
+    # vector-quantized uint8 index arenas (core/vq.py; README "KV-VQ
+    # memory model"). The row's kv_bytes gauges report the COMPRESSED
+    # footprint, and concurrency_at_fixed_hbm is the headline serving
+    # win: how many slots the fp engine's KV block budget funds once
+    # blocks shrink to index+scale width (same block count, smaller
+    # bytes_per_block)
+    meta_fp = make_paging_config(model, 2, 32, block_size=4)
+    meta_q = make_paging_config(model, 2, 32, block_size=4,
+                                kvq=KVQuantConfig(kv_bits=4))
+    conc = 2 * meta_fp.bytes_per_block / max(meta_q.bytes_per_block, 1)
+    eng_q = Engine(model, params, rc,
+                   EngineConfig(num_slots=2, max_len=32, kv_bits=4,
+                                paged=True, block_size=4))
+    mq, wall_q, events_q = _trace(eng_q, _requests(cfg, rng, max_new))
+    report("serve/kvvq_request_trace", wall_q * 1e6 / max(len(reqs), 1),
+           f"{_metrics_fields(mq, wall_q)};wall_us={wall_q*1e6:.0f};"
+           f"events={len(events_q)};kv_bits=4;"
+           f"fp_bytes_per_block={meta_fp.bytes_per_block};"
+           f"kvvq_bytes_per_block={meta_q.bytes_per_block};"
+           f"concurrency_at_fixed_hbm={conc:.2f}")

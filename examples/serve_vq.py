@@ -10,11 +10,18 @@ reuse, Fig. 7(c)).
 
     PYTHONPATH=src python examples/serve_vq.py --arch mixtral-8x22b
     PYTHONPATH=src python examples/serve_vq.py --paged --block-size 8
+    PYTHONPATH=src python examples/serve_vq.py --paged --kv-bits 4
 
 With --paged the engine serves from the block-table KV memory
 subsystem (serve/paging.py): shared block arenas + per-slot tables,
 chunked prefill, and out-of-blocks preemption — token-identical to
 the contiguous layout.
+
+--kv-bits picks the KV cache storage width (README "KV-VQ memory
+model"): 16 = model dtype, 8 = per-channel int8, 4/2 = vector-quantized
+uint8 codebook indices (core/vq.py) consumed natively by the decode
+kernel. The example prints bytes-per-block for the chosen width next to
+the fp baseline — the ratio is the concurrency gain at fixed KV HBM.
 """
 import argparse
 import logging
@@ -27,8 +34,9 @@ from repro.configs import get_smoke_config
 from repro.core.plan import PlanPolicy
 from repro.models import build_model
 from repro.models.common import RunConfig
+from repro.core.vq import KVQuantConfig
 from repro.serve import (Engine, EngineConfig, GenerationRequest,
-                         SamplingParams)
+                         SamplingParams, make_paging_config)
 
 
 def main():
@@ -43,6 +51,10 @@ def main():
                     help="block-table KV memory (serve/paging.py)")
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--kv-bits", type=int, default=16,
+                    choices=(16, 8, 4, 2),
+                    help="KV storage width: 16=model dtype, 8=int8, "
+                         "4/2=vector-quantized (KV-VQ)")
     args = ap.parse_args()
 
     # INFO logging shows the engine's pre-planned per-bucket prefill and
@@ -58,7 +70,21 @@ def main():
     eng = Engine(model, params, rc,
                  EngineConfig(num_slots=args.slots, max_len=64,
                               paged=args.paged, block_size=args.block_size,
-                              prefill_chunk=args.prefill_chunk))
+                              prefill_chunk=args.prefill_chunk,
+                              kv_bits=args.kv_bits))
+    if args.kv_bits != 16:
+        # the concurrency headline: compressed blocks mean the fp KV
+        # budget funds proportionally more slots at the same HBM
+        meta_fp = make_paging_config(model, args.slots, 64,
+                                     block_size=args.block_size)
+        kw = ({"kvq": KVQuantConfig(kv_bits=args.kv_bits)}
+              if args.kv_bits in (4, 2) else {"kv_int8": True})
+        meta_q = make_paging_config(model, args.slots, 64,
+                                    block_size=args.block_size, **kw)
+        gain = meta_fp.bytes_per_block / meta_q.bytes_per_block
+        print(f"  kv_bits={args.kv_bits}: {meta_q.bytes_per_block} B/block "
+              f"vs {meta_fp.bytes_per_block} fp — {gain:.1f}x slots at "
+              f"fixed KV HBM (~{int(args.slots * gain)} vs {args.slots})")
 
     rng = np.random.default_rng(0)
     eos_ids = () if args.eos is None else (args.eos,)

@@ -1,3 +1,6 @@
+"""Core quantization + execution-planning package: weight/KV vector
+quantization (vq), fused ops, and the cost-ranked matmul planner (plan).
+"""
 from repro.core.vq import VQWeight, fit_vq, dequantize, synthetic_vq, vq_specs
 from repro.core.ops import (
     eva_matmul, dequant_matmul, fp_matmul, int8_matmul, vq_matmul,

@@ -69,7 +69,7 @@ from repro.core.vq import VQWeight
 
 log = logging.getLogger(__name__)
 
-WEIGHT_KINDS = ("dense", "int8", "vq")
+WEIGHT_KINDS = ("dense", "int8", "vq", "kvq_attn")
 VQ_MODES = ("none", "eva", "dequant")
 IMPLS = ("jnp", "pallas")
 
@@ -89,8 +89,10 @@ class LinearSpec:
     """Shape + weight-kind signature of one matmul site.
 
     ``kind`` is the *resolved* weight kind: "dense" (fp path), "int8"
-    (a dense weight executed through the INT8 prefill GEMM) or "vq".
-    The VQ geometry fields are zero for non-VQ kinds. ``in_mesh``
+    (a dense weight executed through the INT8 prefill GEMM), "vq", or
+    "kvq_attn" (a KV-VQ decode-attention site — see
+    ``kvq_attention_spec`` for the field mapping). The VQ geometry
+    fields are zero for non-VQ kinds. ``in_mesh``
     records whether the spec was derived inside an active mesh context
     (pjit/shard_map) — the SPMD-friendly flat epilogue is preferred
     there, exactly like the pre-plan string-knob behavior."""
@@ -116,6 +118,9 @@ class LinearSpec:
     @classmethod
     def for_vq(cls, vq: VQWeight, *, M: int, x_dtype, out_dtype,
                in_mesh: Optional[bool] = None) -> "LinearSpec":
+        """Spec for a VQ weight leaf: geometry read off the ``VQWeight``
+        (K/N/C/V/centroids/splits), ``M`` supplied by the call site.
+        ``in_mesh=None`` auto-detects an active pjit/shard_map context."""
         k = vq.codebooks.shape[-1] if hasattr(vq.codebooks, "shape") else 2 ** vq.n
         return cls(
             M=int(M), K=vq.K, N=vq.N, kind="vq",
@@ -127,6 +132,10 @@ class LinearSpec:
     @classmethod
     def for_dense(cls, w, *, M: int, x_dtype, out_dtype, kind: str = "dense",
                   in_mesh: Optional[bool] = None) -> "LinearSpec":
+        """Spec for a dense weight array ``w`` of shape (.., K, N);
+        ``kind`` may be "int8" for the INT8 prefill GEMM path.
+
+        Raises: ValueError (from __post_init__) on an unknown kind."""
         K, N = int(w.shape[-2]), int(w.shape[-1])
         return cls(
             M=int(M), K=K, N=N, kind=kind,
@@ -248,9 +257,12 @@ class MatmulPlan:
 
     @property
     def config_dict(self) -> Dict[str, Any]:
+        """The frozen backend config as a plain dict (logging/tests)."""
         return dict(self.config)
 
     def describe(self) -> str:
+        """One-line human summary: backend, shape, resolved config and
+        the ranked prediction (``pred=..us(analytic|eva-calibration/v1)``)."""
         s = self.spec
         parts = [self.backend, f"M={s.M}", f"K={s.K}", f"N={s.N}"]
         if s.splits:
@@ -268,6 +280,36 @@ class MatmulPlan:
         if len(self.ranking) < 2:
             return ""
         return " < ".join(f"{b}={us:.0f}us" for b, us in self.ranking)
+
+
+def kvq_attention_spec(*, B: int, S: int, H: int, Hk: int, hd: int,
+                       idx_width: int, entries: int,
+                       x_dtype, out_dtype) -> LinearSpec:
+    """Spec for a KV-VQ decode-attention site (kind="kvq_attn").
+
+    Decode attention over a vector-quantized cache is a matmul-shaped
+    site the planner can rank like any other: the field mapping is
+    M=batch, K=cache length S, N=H*hd (the per-token attention output),
+    C=Hk (kv heads), V=idx_width (uint8 indices per token per head),
+    k=entries (codebook rows), d=hd. Backends registered from
+    ``kernels/flash_decode/ops.py`` match on the kind; cost-ranked
+    selection chooses between the dequantize-jnp path and the fused
+    Pallas kernel.
+
+    Args:
+      B/S/H/Hk/hd: decode-attention geometry (static at trace time).
+      idx_width: R*G uint8 indices per (token, head) — see
+        core.vq.KVQuantConfig.idx_width.
+      entries: codebook rows per stage (256).
+      x_dtype/out_dtype: query/output dtypes.
+
+    Returns: a hashable LinearSpec usable as a planner cache key.
+    """
+    return LinearSpec(
+        M=int(B), K=int(S), N=int(H * hd), kind="kvq_attn",
+        x_dtype=jnp.dtype(x_dtype).name, out_dtype=jnp.dtype(out_dtype).name,
+        C=int(Hk), V=int(idx_width), k=int(entries), d=int(hd),
+    )
 
 
 def vq_weight_bytes(spec: LinearSpec) -> int:
@@ -300,6 +342,7 @@ _KERNEL_BACKEND_MODULES = (
     "repro.kernels.oc_lookup.ops",
     "repro.kernels.dequant_gemv.ops",
     "repro.kernels.int8_gemm.ops",
+    "repro.kernels.flash_decode.ops",  # KV-VQ decode-attention backends
 )
 _kernels_loaded = False
 
@@ -320,6 +363,8 @@ def register_backend(name: str,
 
 
 def registered_backends() -> Tuple[str, ...]:
+    """All registered backend names in registration order (kernel
+    modules are imported first, so the tuple is complete)."""
     _ensure_kernel_backends()
     return tuple(_REGISTRY)
 
@@ -438,6 +483,7 @@ class Planner:
 
     @property
     def calibration(self) -> Optional[calibrate_mod.Calibration]:
+        """The loaded cost-model constants (None = analytic only)."""
         return self._calibration
 
     def reload_calibration(self, calibration: Any = "default") -> None:
@@ -448,6 +494,13 @@ class Planner:
                              if calibration == "default" else calibration)
 
     def plan(self, spec: LinearSpec, policy: PlanPolicy) -> MatmulPlan:
+        """Resolve (spec, policy) to the cheapest eligible MatmulPlan
+        (LRU-cached; quarantined backends are skipped).
+
+        Raises:
+          ValueError: no registered backend matches the pair — or, on a
+            jnp-policy miss, not even after lazily importing the kernel
+            backend modules."""
         quarantined = self._active_quarantine()  # may purge + clear cache
         key = (spec, policy)
         with self._lock:
@@ -586,10 +639,12 @@ class Planner:
         return tuple(be for be in backends if be.matcher(spec, policy))
 
     def cache_info(self) -> CacheInfo:
+        """functools-style (hits, misses, currsize, maxsize) counters."""
         return CacheInfo(self._hits, self._misses, len(self._cache),
                          self._maxsize)
 
     def cache_clear(self) -> None:
+        """Drop every cached plan and reset the hit/miss counters."""
         with self._lock:
             self._cache.clear()
             self._hits = 0
@@ -600,6 +655,7 @@ _PLANNER = Planner()
 
 
 def default_planner() -> Planner:
+    """The process-global Planner every model-layer entry point uses."""
     return _PLANNER
 
 

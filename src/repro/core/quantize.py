@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.vq import (VQWeight, fit_vq, splits_shard_aligned,
+from repro.core.vq import (KVQuantConfig, VQWeight, fit_kv_codebooks, fit_vq,
+                           kv_grid_codebooks, splits_shard_aligned,
                            synthetic_vq, vq_specs)
 
 if TYPE_CHECKING:  # only for annotations — avoids a core<->models cycle
@@ -282,6 +283,174 @@ def quantize_params(params: Any, cfg: ModelConfig, *, method: str = "fit",
         return node
 
     return walk(params, ())
+
+
+# ---------------------------------------------------------------------------
+# KV-VQ codebook attachment (serving-time KV cache compression)
+# ---------------------------------------------------------------------------
+#
+# KV codebooks live in the PARAM tree, one node per attention layer
+# (stacked with the scanned layer params), NOT in the cache: every cache
+# leaf is zero-initialized, slot-sliced and block-scattered by the
+# serving memory layer (serve/paging.py), which would corrupt resident
+# codebooks. Attached under the attention param dict as
+#   p["kv_cb"] = {"k": (L, Hk, R, 256, vec_d), "v": ...}        (GQA)
+#   p["kv_cb"] = {"lat": (L, 1, R, 256, vec_d)}                 (MLA latent)
+# so the layer scan hands each layer its own (Hk, R, 256, vec_d) slice
+# and models/common.attention_fwd can encode at cache-append time.
+
+# cache-subtree name for each param-tree layer-stack segment
+_KV_STACK_SEGMENTS = {"layers": "body", "pre_layers": "pre"}
+
+
+def _is_gqa_attn_node(node: Any, path: Tuple[str, ...]) -> bool:
+    return (isinstance(node, dict) and "wo" in node
+            and ("wq" in node or "wqkv" in node) and "wkv_b" not in node
+            and (not path or path[-1] not in _NO_GROUP_KEYS))
+
+
+def _is_mla_attn_node(node: Any) -> bool:
+    return isinstance(node, dict) and "wkv_b" in node
+
+
+def _node_lead(node: dict) -> Tuple[int, ...]:
+    """Stacked leading dims of an attention param node (scan layers)."""
+    anchor = node["wo"] if "wo" in node else node["wkv_b"]
+    if "vq" in anchor:
+        return tuple(anchor["vq"].idx.shape[:-3])
+    return tuple(anchor["w"].shape[:-2])
+
+
+def attach_kv_codebooks(params: Any, cfg: "ModelConfig", kvq: KVQuantConfig,
+                        *, codebooks: Optional[Any] = None) -> Any:
+    """Attach per-layer KV codebooks to every attention param node.
+
+    Args:
+      params: model params (fp or already VQ-quantized — detection keys
+        survive both).
+      cfg: the ModelConfig (supplies num_kv_heads / head_dim /
+        kv_lora_rank geometry).
+      kvq: frozen KV-VQ geometry/variant.
+      codebooks: optional calibrated codebook tree from
+        ``calibrate_kv_codebooks`` keyed like the cache
+        ({"body": {"k": (L, Hk, R, 256, vd), ...}, "pre": ...}); when
+        None every layer gets the deterministic ``kv_grid_codebooks``
+        lattice (calibration-free default).
+
+    Returns:
+      A new param tree with ``kv_cb`` nodes attached (idempotent:
+      existing ``kv_cb`` nodes are replaced).
+
+    Raises:
+      ValueError: when head_dim / kv_lora_rank is not divisible by the
+        config's vec_d.
+    """
+    def build(num_heads: int, dim: int, lead: Tuple[int, ...],
+              fitted: Optional[jax.Array]) -> jax.Array:
+        if fitted is not None:
+            return fitted  # already (L, Hk, R, E, vd)
+        cb = kv_grid_codebooks(num_heads, dim, kvq)
+        return jnp.broadcast_to(cb, lead + cb.shape)
+
+    def walk(node, path, stack):
+        if not isinstance(node, dict):
+            return node
+        seg = _KV_STACK_SEGMENTS.get(path[-1]) if path else None
+        stack = seg or stack
+        fitted = (codebooks or {}).get(stack) if stack else None
+        if _is_gqa_attn_node(node, path):
+            lead = _node_lead(node)
+            out = dict(node)
+            out["kv_cb"] = {
+                "k": build(cfg.num_kv_heads, cfg.head_dim, lead,
+                           (fitted or {}).get("k")),
+                "v": build(cfg.num_kv_heads, cfg.head_dim, lead,
+                           (fitted or {}).get("v")),
+            }
+            return out
+        if _is_mla_attn_node(node):
+            lead = _node_lead(node)
+            out = dict(node)
+            out["kv_cb"] = {
+                "lat": build(1, cfg.kv_lora_rank, lead,
+                             (fitted or {}).get("lat")),
+            }
+            return out
+        return {k: walk(v, path + (k,), stack) for k, v in node.items()}
+
+    return walk(params, (), None)
+
+
+def kv_codebook_tree(params: Any) -> Dict[str, Any]:
+    """Collect attached ``kv_cb`` nodes keyed by cache subtree name
+    ({"body": {...}, "pre": {...}}) — the layout
+    ``serve/kvcache.encode_prefill_cache`` consumes.
+
+    Raises:
+      ValueError: when params carry no kv_cb nodes (attach first)."""
+    out: Dict[str, Any] = {}
+
+    def walk(node, stack):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            if k == "kv_cb" and stack:
+                out[stack] = v
+            else:
+                walk(v, _KV_STACK_SEGMENTS.get(k, stack))
+
+    walk(params, None)
+    if not out:
+        raise ValueError("params carry no kv_cb nodes "
+                         "(run attach_kv_codebooks first)")
+    return out
+
+
+def calibrate_kv_codebooks(model: Any, params: Any, batch: Dict[str, Any],
+                           kvq: KVQuantConfig, *,
+                           key: Optional[jax.Array] = None) -> Dict[str, Any]:
+    """Fit per-layer/per-head KV codebooks from calibration prompts.
+
+    Runs one fp prefill of ``batch`` (e.g. {"tokens": (B, S)}) and
+    k-means-fits each layer's K/V (or MLA latent) distribution through
+    ``core.vq.fit_kv_codebooks``.
+
+    Returns:
+      A codebook tree for ``attach_kv_codebooks(codebooks=...)``:
+      {"body": {"k": (L, Hk, R, 256, vec_d), "v": ...}, "pre": ...}
+      (MLA subtrees carry {"lat": (L, 1, R, 256, vec_d)}).
+    """
+    from repro.models.common import RunConfig  # local: avoid import cycle
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    rc = RunConfig(mode="prefill", remat=False, attn_chunk=16)
+    _, cache = model.prefill(params, batch, rc)
+
+    def fit_stack(samples: jax.Array, k_: jax.Array) -> jax.Array:
+        # samples: (L, T, Hk, dim) -> (L, Hk, R, E, vd)
+        keys = jax.random.split(k_, samples.shape[0])
+        return jax.lax.map(
+            lambda a: fit_kv_codebooks(a[0], a[1], kvq), (keys, samples))
+
+    out: Dict[str, Any] = {}
+    for name, node in cache.items():
+        if not isinstance(node, dict):
+            continue
+        L = jax.tree_util.tree_leaves(node)[0].shape[0]
+        if "k" in node and "v" in node:
+            k_smp = node["k"].reshape(L, -1, *node["k"].shape[-2:])
+            v_smp = node["v"].reshape(L, -1, *node["v"].shape[-2:])
+            key, k1, k2 = jax.random.split(key, 3)
+            out[name] = {"k": fit_stack(k_smp, k1),
+                         "v": fit_stack(v_smp, k2)}
+        elif "latent" in node:
+            lat = node["latent"]
+            lat_smp = lat.reshape(L, -1, 1, lat.shape[-1])
+            key, k1 = jax.random.split(key)
+            out[name] = {"lat": fit_stack(lat_smp, k1)}
+    if not out:
+        raise ValueError("prefill cache carries no quantizable KV nodes")
+    return out
 
 
 def count_vq_layers(params: Any) -> int:

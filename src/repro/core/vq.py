@@ -328,3 +328,221 @@ def reconstruction_error(W: jax.Array, vq: VQWeight) -> jax.Array:
     """Relative Frobenius reconstruction error ||W - W_hat|| / ||W||."""
     W_hat = dequantize(vq)
     return jnp.linalg.norm(W - W_hat) / jnp.maximum(jnp.linalg.norm(W), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache vector quantization (KV-VQ)
+# ---------------------------------------------------------------------------
+#
+# The weight machinery above compresses *static* matrices offline; the
+# KV cache is written one token at a time inside the jitted decode step,
+# so KV-VQ uses a simpler per-head geometry that encodes in O(E) work
+# per token:
+#
+#   vec_d : channels per code group (head_dim must divide)
+#   R     : additive residual stages (stage r quantizes the residual of
+#           stages < r, VecInfer/Kumar style)
+#   E     : 256 entries per stage, so every index is exactly one uint8
+#
+# A (.., Hk, hd) K/V slice stores as uint8 indices (.., Hk, R*G) with
+# G = hd // vec_d plus ONE fp scale per (token, head) — riding the int8
+# `k_s`/`v_s` plumbing. Effective bits/channel = 8*R/vec_d, so
+# KVQuantConfig(kv_bits=4) is 4-bit KV and kv_bits=2 is 2-bit KV.
+
+KV_VARIANTS = ("outlier", "rms")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantConfig:
+    """Frozen geometry/variant selector for vector-quantized KV caches.
+
+    Args:
+      kv_bits: effective stored bits per K/V channel (4 or 2).
+      residual: number of additive codebook stages R (>= 1). More stages
+        widen ``vec_d`` at fixed ``kv_bits`` (8*R/vec_d = kv_bits).
+      variant: per-(token, head) scale rule applied before codebook
+        assignment — "outlier" divides by the absmax channel so a single
+        outlier can never saturate the codebook range (VecInfer's
+        outlier suppression), "rms" divides by 2*rms (denser coverage of
+        the bulk, outliers clip to the grid edge).
+      entries: codebook entries per stage; fixed at 256 so one index is
+        one uint8 and the paged arenas stay byte-addressed.
+
+    Raises:
+      ValueError: on unknown variant, unsupported kv_bits, entries != 256,
+        or a (kv_bits, residual) pair with non-integral vec_d.
+    """
+
+    kv_bits: int = 4
+    residual: int = 1
+    variant: str = "outlier"
+    entries: int = 256
+
+    def __post_init__(self):
+        if self.kv_bits not in (2, 4):
+            raise ValueError(f"kv_bits must be 2 or 4, got {self.kv_bits}")
+        if self.entries != 256:
+            raise ValueError(
+                f"entries is fixed at 256 (uint8 index), got {self.entries}")
+        if self.variant not in KV_VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; expected one of {KV_VARIANTS}")
+        if self.residual < 1 or (8 * self.residual) % self.kv_bits:
+            raise ValueError(
+                f"residual={self.residual} does not give integral vec_d at "
+                f"kv_bits={self.kv_bits}")
+
+    @property
+    def vec_d(self) -> int:
+        """Channels per code group (8*R/kv_bits)."""
+        return (8 * self.residual) // self.kv_bits
+
+    def groups(self, dim: int) -> int:
+        """Code groups per head of width ``dim``; dim must divide by vec_d."""
+        if dim % self.vec_d:
+            raise ValueError(
+                f"head dim {dim} not divisible by vec_d={self.vec_d}")
+        return dim // self.vec_d
+
+    def idx_width(self, dim: int) -> int:
+        """uint8 indices stored per (token, head): R * groups(dim)."""
+        return self.residual * self.groups(dim)
+
+
+def kv_scale(x: jax.Array, variant: str = "outlier") -> jax.Array:
+    """Per-(token, head) normalization scale over the trailing channel
+    axis. Returns fp32 ``x.shape[:-1]``, clamped away from zero."""
+    xf = x.astype(jnp.float32)
+    if variant == "outlier":
+        s = jnp.max(jnp.abs(xf), axis=-1)
+    elif variant == "rms":
+        s = 2.0 * jnp.sqrt(jnp.mean(xf * xf, axis=-1))
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return jnp.maximum(s, 1e-8)
+
+
+def kv_grid_codebooks(num_heads: int, dim: int,
+                      kvq: KVQuantConfig) -> jax.Array:
+    """Deterministic per-head codebooks: a uniform lattice over the
+    scale-normalized range [-1, 1]^vec_d, one refining lattice per
+    residual stage (stage r shrinks by levels^-r). With vec_d=2 this is
+    exactly a 16-level-per-channel (int4) grid; vec_d=4 a 4-level (2-bit)
+    grid — the calibration-free default. Returns (Hk, R, 256, vec_d)."""
+    vd, R = kvq.vec_d, kvq.residual
+    levels = int(round(kvq.entries ** (1.0 / vd)))
+    if levels ** vd != kvq.entries:
+        raise ValueError(
+            f"no integral grid: entries={kvq.entries} has no {vd}-th root "
+            "(use fit_kv_codebooks for this geometry)")
+    kvq.groups(dim)  # validate divisibility loudly here, not at encode
+    axis = np.linspace(-1.0, 1.0, levels, dtype=np.float32)
+    grid = np.stack(np.meshgrid(*([axis] * vd), indexing="ij"),
+                    axis=-1).reshape(kvq.entries, vd)
+    stages = np.stack([grid * float(levels) ** (-r) for r in range(R)])
+    return jnp.broadcast_to(jnp.asarray(stages),
+                            (num_heads, R, kvq.entries, vd))
+
+
+def fit_kv_codebooks(key: jax.Array, samples: jax.Array,
+                     kvq: KVQuantConfig, *, kmeans_iters: int = 12
+                     ) -> jax.Array:
+    """Fit per-head KV codebooks from calibration K/V samples.
+
+    Args:
+      key: PRNG key for k-means seeding.
+      samples: (T, Hk, dim) calibration slices (e.g. prefill K or V of a
+        calibration prompt, flattened over batch and time).
+      kvq: geometry/variant to fit.
+      kmeans_iters: Lloyd iterations per stage.
+
+    Returns:
+      (Hk, R, 256, vec_d) fp32 codebooks: stage r of head h is k-means
+      over head h's scale-normalized residual after stages < r.
+    """
+    T, Hk, dim = samples.shape
+    G, vd = kvq.groups(dim), kvq.vec_d
+    s = kv_scale(samples, kvq.variant)                      # (T, Hk)
+    pts = (samples.astype(jnp.float32) / s[..., None]).reshape(T, Hk, G, vd)
+    pts = pts.transpose(1, 0, 2, 3).reshape(Hk, T * G, vd)  # per-head points
+    stages = []
+    for r in range(kvq.residual):
+        cents, assign = jax.vmap(
+            lambda p, k_=jax.random.fold_in(key, r): kmeans(
+                k_, p, kvq.entries, iters=kmeans_iters))(pts)
+        stages.append(cents)                                # (Hk, E, vd)
+        take = jax.vmap(lambda c, a: c[a])
+        pts = pts - take(cents, assign)
+    return jnp.stack(stages, axis=1)                        # (Hk, R, E, vd)
+
+
+def _flat_take(cb_flat: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather rows of a flattened codebook table by integer index."""
+    return jnp.take(cb_flat, idx, axis=0)
+
+
+def kv_encode(x: jax.Array, cb: jax.Array, variant: str = "outlier"
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a K/V slice against per-head codebooks.
+
+    Args:
+      x: (..., Hk, dim) fp K or V values.
+      cb: (Hk, R, 256, vec_d) codebooks (kv_grid_codebooks /
+        fit_kv_codebooks); geometry is derived from this shape.
+      variant: scale rule — must match the KVQuantConfig the codebooks
+        were built for.
+
+    Returns:
+      (idx, scale): uint8 indices (..., Hk, R*G) and fp32 per-(token,
+      head) scales (..., Hk). ``kv_decode(idx, scale, cb)`` is the
+      dequantize oracle.
+    """
+    Hk, R, E, vd = cb.shape
+    lead = x.shape[:-2]
+    dim = x.shape[-1]
+    G = dim // vd
+    scale = kv_scale(x, variant)                            # (..., Hk)
+    xn = (x.astype(jnp.float32) / scale[..., None]).reshape(
+        lead + (Hk, G, vd))
+    cbf = cb.astype(jnp.float32)
+    h_iota = jnp.arange(Hk, dtype=jnp.int32).reshape(
+        (1,) * len(lead) + (Hk, 1))
+    resid = xn
+    idxs = []
+    for r in range(R):
+        cbr = cbf[:, r]                                     # (Hk, E, vd)
+        dots = jnp.einsum("...hgc,hec->...hge", resid, cbr)
+        d2 = jnp.sum(cbr * cbr, axis=-1)                    # (Hk, E)
+        a = jnp.argmin(d2[:, None, :] - 2.0 * dots,
+                       axis=-1).astype(jnp.int32)           # (..., Hk, G)
+        chosen = _flat_take(cbr.reshape(Hk * E, vd), h_iota * E + a)
+        resid = resid - chosen
+        idxs.append(a.astype(jnp.uint8))
+    idx = jnp.stack(idxs, axis=-2)                          # (..., Hk, R, G)
+    return idx.reshape(lead + (Hk, R * G)), scale
+
+
+def kv_decode(idx: jax.Array, scale: jax.Array, cb: jax.Array) -> jax.Array:
+    """Dequantize-oracle reconstruction of a KV-VQ slice.
+
+    Args:
+      idx: (..., Hk, R*G) uint8 indices from ``kv_encode``.
+      scale: (..., Hk) per-(token, head) scales (any float dtype).
+      cb: (Hk, R, 256, vec_d) codebooks.
+
+    Returns:
+      (..., Hk, G*vec_d) fp32 reconstruction — the exact values every
+      KV-VQ execution path (jnp and Pallas) is parity-pinned against.
+    """
+    Hk, R, E, vd = cb.shape
+    lead = idx.shape[:-2]
+    G = idx.shape[-1] // R
+    a = idx.reshape(lead + (Hk, R, G)).astype(jnp.int32)
+    h_iota = jnp.arange(Hk, dtype=jnp.int32).reshape(
+        (1,) * len(lead) + (Hk, 1, 1))
+    r_iota = jnp.arange(R, dtype=jnp.int32).reshape(
+        (1,) * len(lead) + (1, R, 1))
+    flat = (h_iota * R + r_iota) * E + a                    # (..., Hk, R, G)
+    chosen = _flat_take(cb.astype(jnp.float32).reshape(Hk * R * E, vd), flat)
+    xn = chosen.sum(axis=-3)                                # (..., Hk, G, vd)
+    return xn.reshape(lead + (Hk, G * vd)) * scale[..., None].astype(jnp.float32)

@@ -1,2 +1,5 @@
-from repro.kernels.flash_decode.ops import flash_decode, flash_decode_paged
-from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.flash_decode.ops import (flash_decode, flash_decode_kvq,
+                                            flash_decode_kvq_paged,
+                                            flash_decode_paged)
+from repro.kernels.flash_decode.ref import (flash_decode_kvq_ref,
+                                            flash_decode_ref)

@@ -8,6 +8,16 @@ GQA layout: q (B, H, hd), cache (B, S, Hk, hd), groups g = H // Hk.
 Grid: (B, num_s_blocks) with S innermost; per step the kernel computes
 scores for one cache block against all heads and folds them into the
 (m, l, acc) online-softmax state in VMEM scratch.
+
+``_flash_decode_kvq_kernel`` is the vector-quantized variant — the EVA
+trick in reverse. The cache stores uint8 codebook indices, never fp K/V:
+the wrapper dots the query against the K codebook ONCE per step (a
+(B, Hk, g, R*G, E) table whose cost is independent of S), the kernel
+streams the uint8 index blocks, gathers per-token scores from that
+table, runs the same online softmax, and reconstructs V contributions
+from the V codebook rows after softmax weighting. HBM traffic per step
+is the compressed cache (R*G bytes/token/head + one scale) instead of
+2*hd fp values.
 """
 from __future__ import annotations
 
@@ -58,6 +68,116 @@ def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
     def _finalize():
         o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
         o_ref[0] = o.reshape(H, hd).astype(o_ref.dtype)
+
+
+def _flash_decode_kvq_kernel(qd_ref, kidx_ref, vidx_ref, ks_ref, vs_ref,
+                             cbv_ref, len_ref, o_ref,
+                             m_scr, l_scr, acc_scr, *, n_s_blocks: int,
+                             block_s: int):
+    s_blk = pl.program_id(1)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qd = qd_ref[0]                                    # (Hk, g, RG, E) f32
+    kidx = kidx_ref[0].astype(jnp.int32)              # (bs, Hk, RG)
+    vidx = vidx_ref[0].astype(jnp.int32)              # (bs, Hk, RG)
+    ks = ks_ref[0].astype(jnp.float32)                # (bs, Hk)
+    vs = vs_ref[0].astype(jnp.float32)                # (bs, Hk)
+    cbv = cbv_ref[...].astype(jnp.float32)            # (Hk, R, E, vd)
+    Hk, g, RG, E = qd.shape
+    bs = kidx.shape[0]
+    _, R, _, vd = cbv.shape
+    G = RG // R
+    hd = G * vd
+
+    # scores: the query/K-codebook dots are precomputed in qd (already
+    # 1/sqrt(hd)-scaled); per token just gather-and-sum the R*G entries
+    # its indices select, then apply the per-(token, head) scale.
+    ki = jnp.broadcast_to(
+        jnp.transpose(kidx, (1, 2, 0))[:, None], (Hk, g, RG, bs))
+    s = jnp.take_along_axis(qd, ki, axis=-1).sum(axis=2)   # (Hk, g, bs)
+    s = s * jnp.transpose(ks, (1, 0))[:, None, :]
+    pos = s_blk * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, -1e30)
+
+    m_prev = m_scr[...]                               # (Hk, g)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+
+    # V reconstruction after softmax weighting: gather each token's R*G
+    # codebook rows (flat row id (hk*R + r)*E + idx), sum residual
+    # stages, scale — then fold into the accumulator like fp V.
+    h_i = jax.lax.broadcasted_iota(jnp.int32, (bs, Hk, R, G), 1)
+    r_i = jax.lax.broadcasted_iota(jnp.int32, (bs, Hk, R, G), 2)
+    flat = (h_i * R + r_i) * E + vidx.reshape(bs, Hk, R, G)
+    cb2 = jnp.transpose(cbv.reshape(Hk * R * E, vd), (1, 0))  # (vd, HkRE)
+    rows = jnp.take_along_axis(
+        cb2, jnp.broadcast_to(flat.reshape(1, bs * Hk * RG),
+                              (vd, bs * Hk * RG)), axis=1)
+    vhat = jnp.transpose(rows.reshape(vd, bs, Hk, R, G).sum(axis=3),
+                         (1, 2, 3, 0)).reshape(bs, Hk, hd)
+    vhat = vhat * vs[..., None]
+    acc_scr[...] = (acc_scr[...] * corr[..., None]
+                    + jnp.einsum("kgs,skd->kgd", p, vhat))
+    m_scr[...] = m_new
+
+    @pl.when(s_blk == n_s_blocks - 1)
+    def _finalize():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = o.reshape(Hk * g, hd).astype(o_ref.dtype)
+
+
+def flash_decode_kvq_pallas(
+    qd: jax.Array,       # (B, Hk, g, R*G, E) f32 query/K-codebook dots
+    k_idx: jax.Array,    # (B, S, Hk, R*G) uint8
+    v_idx: jax.Array,    # (B, S, Hk, R*G) uint8
+    k_s: jax.Array,      # (B, S, Hk)
+    v_s: jax.Array,      # (B, S, Hk)
+    cb_v: jax.Array,     # (Hk, R, E, vd) V codebooks
+    lengths: jax.Array,  # (B,) int32
+    *,
+    out_dtype,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hk, g, RG, E = qd.shape
+    S = k_idx.shape[1]
+    _, R, _, vd = cb_v.shape
+    hd = (RG // R) * vd
+    assert S % block_s == 0, (S, block_s)
+    n_s_blocks = S // block_s
+    grid = (B, n_s_blocks)
+
+    kernel = functools.partial(_flash_decode_kvq_kernel,
+                               n_s_blocks=n_s_blocks, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hk, g, RG, E), lambda b, s: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, Hk, RG), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_s, Hk, RG), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_s, Hk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, Hk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((Hk, R, E, vd), lambda b, s: (0, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, Hk * g, hd), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk * g, hd), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hk, g), jnp.float32),
+            pltpu.VMEM((Hk, g), jnp.float32),
+            pltpu.VMEM((Hk, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qd, k_idx, v_idx, k_s, v_s, cb_v, lengths)
 
 
 def flash_decode_pallas(

@@ -1,10 +1,19 @@
-"""Pure-jnp oracle for the flash-decode kernel (plain masked softmax)."""
+"""Pure-jnp oracles for the flash-decode kernels.
+
+``flash_decode_ref`` is the plain masked-softmax oracle over an fp
+cache. ``flash_decode_kvq_ref`` is the DEQUANTIZE ORACLE for the KV-VQ
+kernel: reconstruct the full fp cache through ``core.vq.kv_decode``,
+then run the fp oracle — the Pallas KVQ kernel is parity-pinned against
+this path (tests/test_kvvq.py).
+"""
 from __future__ import annotations
 
 import math
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.vq import kv_decode
 
 
 def flash_decode_ref(q, k, v, lengths) -> jax.Array:
@@ -20,3 +29,21 @@ def flash_decode_ref(q, k, v, lengths) -> jax.Array:
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def flash_decode_kvq_ref(q, k_idx, v_idx, k_s, v_s, lengths,
+                         cb_k, cb_v) -> jax.Array:
+    """Dequantize-then-attend oracle for the KV-VQ decode kernel.
+
+    Args:
+      q: (B, H, hd) queries.
+      k_idx/v_idx: (B, S, Hk, R*G) uint8 codebook indices.
+      k_s/v_s: (B, S, Hk) per-(token, head) scales.
+      lengths: (B,) valid cache lengths.
+      cb_k/cb_v: (Hk, R, E, vd) K/V codebooks.
+
+    Returns: (B, H, hd) attention output in q.dtype.
+    """
+    k = kv_decode(k_idx, k_s, cb_k)
+    v = kv_decode(v_idx, v_s, cb_v)
+    return flash_decode_ref(q, k, v, lengths)

@@ -100,7 +100,15 @@ class Model:
 
     # ------------------------------------------------------------- serving
     def init_cache(self, batch: int, max_len: int, dtype=None,
-                   kv_int8: bool = False, kv_int4: bool = False) -> Any:
+                   kv_int8: bool = False, kv_int4: bool = False,
+                   kvq=None) -> Any:
+        """Allocate decode caches. ``kv_int8``/``kv_int4``/``kvq`` (a
+        core.vq.KVQuantConfig — vector-quantized uint8-index KV) select
+        compressed layouts on the attention families; other families
+        ignore them (recurrent state is not a KV cache)."""
+        if kvq is not None and self.cfg.family in ("dense", "moe"):
+            return self.module.init_cache(self.cfg, batch, max_len, dtype,
+                                          kvq=kvq)
         if (kv_int8 or kv_int4) and self.cfg.family in ("dense", "moe"):
             return self.module.init_cache(self.cfg, batch, max_len, dtype,
                                           kv_int8=kv_int8, kv_int4=kv_int4)
@@ -155,10 +163,12 @@ class Model:
                                quantize_lm_head=quantize_lm_head)
 
     def cache_specs(self, batch: int, max_len: int, kv_int8: bool = False,
-                    kv_int4: bool = False) -> Any:
+                    kv_int4: bool = False, kvq=None) -> Any:
+        """ShapeDtypeStruct cache tree for the given compression knobs
+        (used by serve/paging.py byte accounting and launch dry-runs)."""
         return jax.eval_shape(
             functools.partial(self.init_cache, batch, max_len,
-                              kv_int8=kv_int8, kv_int4=kv_int4)
+                              kv_int8=kv_int8, kv_int4=kv_int4, kvq=kvq)
         )
 
     def supports_shape(self, shape: str) -> bool:

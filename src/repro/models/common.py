@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.vq import VQWeight
+from repro.core.vq import KVQuantConfig, VQWeight, kv_decode, kv_encode
 from repro.core import ops as core_ops
 from repro.core import plan as plan_mod
 from repro.core.plan import PlanPolicy
@@ -137,6 +137,10 @@ class RunConfig:
     mla_absorb: bool = False         # MLA decode in latent space (weight absorption)
     kv_cache_int8: bool = False      # int8-quantized KV cache (GQA decode)
     kv_cache_int4: bool = False      # int4-quantized KV cache (more aggressive)
+    # vector-quantized KV cache (core/vq.py KVQuantConfig; frozen and
+    # hashable). Carries the scale variant the append-time encoder must
+    # use; cache detection itself is structural (uint8 "k"/"latent_s")
+    kv_vq: Optional[KVQuantConfig] = None
 
     @property
     def policy(self) -> PlanPolicy:
@@ -427,6 +431,29 @@ def _quantize_kv(x: jax.Array, dtype=jnp.int8):
     return q, scale.astype(jnp.bfloat16)
 
 
+def _kvq_decode_attention(q, k_idx, v_idx, k_s, v_s, lengths, cb_k, cb_v,
+                          rc: RunConfig, window: int) -> jax.Array:
+    """Attend over a KV-VQ cache view (contiguous shape — paged callers
+    gather first). Full-cache sites resolve through the planner: every
+    backend matching kind="kvq_attn" (the dequantize-jnp oracle and,
+    under impl="pallas", the fused kernel) is cost-ranked and the
+    cheapest executes. Ring/SWA caches skip the planner — ring validity
+    semantics live in decode_attention — and always dequantize."""
+    if window == 0:
+        B, S, Hk, idx_w = k_idx.shape
+        H, hd = q.shape[2], q.shape[3]
+        spec = plan_mod.kvq_attention_spec(
+            B=B, S=S, H=H, Hk=Hk, hd=hd, idx_width=idx_w,
+            entries=cb_k.shape[-2], x_dtype=q.dtype, out_dtype=q.dtype)
+        kplan = plan_mod.plan(spec, rc.policy)
+        return kplan.execute(
+            (q, k_idx, v_idx, k_s, v_s, lengths, cb_k, cb_v), None)
+    k_view = kv_decode(k_idx, k_s, cb_k)
+    v_view = kv_decode(v_idx, v_s, cb_v)
+    return decode_attention(q, k_view, v_view, lengths,
+                            window=window, ring=window > 0)
+
+
 def make_attention(key, cfg: ModelConfig, *, bias: Optional[bool] = None) -> Params:
     bias = cfg.qkv_bias if bias is None else bias
     ks = jax.random.split(key, 4)
@@ -499,7 +526,29 @@ def attention_fwd(
                                   axis=1)[:, 0]
         off = slot % bs_blk
         new_len = cache_len + 1
-        if "k_s" in cache:
+        if "k_s" in cache and cache["k"].dtype == jnp.uint8:
+            # KV-VQ paged decode: encode the new token against the
+            # params-resident codebooks (p["kv_cb"]), scatter uint8
+            # indices + scales through the block table, attend natively
+            # over the compressed arena view.
+            variant = rc.kv_vq.variant if rc.kv_vq is not None else "outlier"
+            cb_k, cb_v = p["kv_cb"]["k"], p["kv_cb"]["v"]
+            k_idx, k_sc = kv_encode(k, cb_k, variant)
+            v_idx, v_sc = kv_encode(v, cb_v, variant)
+            k_arena = cache["k"].at[blk, off].set(k_idx[:, 0], mode="drop")
+            v_arena = cache["v"].at[blk, off].set(v_idx[:, 0], mode="drop")
+            ks_arena = cache["k_s"].at[blk, off].set(
+                k_sc[:, 0].astype(cache["k_s"].dtype), mode="drop")
+            vs_arena = cache["v_s"].at[blk, off].set(
+                v_sc[:, 0].astype(cache["v_s"].dtype), mode="drop")
+            o = _kvq_decode_attention(
+                q, _paged_view(k_arena, bt), _paged_view(v_arena, bt),
+                _paged_view(ks_arena, bt), _paged_view(vs_arena, bt),
+                new_len, cb_k, cb_v, rc, window)
+            new_cache = {"k": k_arena, "v": v_arena, "k_s": ks_arena,
+                         "v_s": vs_arena, "len": new_len,
+                         "block_table": bt}
+        elif "k_s" in cache:
             cdt = cache["k"].dtype
             kq, ks_ = _quantize_kv(k, cdt)
             vq_, vs_ = _quantize_kv(v, cdt)
@@ -538,8 +587,30 @@ def attention_fwd(
         Sc = cache["k"].shape[1]
         cache_len = cache["len"]                       # (B,)
         slot = (cache_len % Sc) if window > 0 else jnp.minimum(cache_len, Sc - 1)
-        int8_cache = "k_s" in cache  # §Perf: int8/int4-quantized KV cache
-        if int8_cache:
+        kvq_cache = "k_s" in cache and cache["k"].dtype == jnp.uint8
+        int8_cache = "k_s" in cache and not kvq_cache  # §Perf: int8/int4 KV
+        if kvq_cache:
+            # KV-VQ contiguous decode: encode the new token's K/V against
+            # the per-head codebooks, write uint8 indices + scales into
+            # the (ring) cache, attend via the planned backend
+            variant = rc.kv_vq.variant if rc.kv_vq is not None else "outlier"
+            cb_k, cb_v = p["kv_cb"]["k"], p["kv_cb"]["v"]
+            k_idx, k_sc = kv_encode(k, cb_k, variant)
+            v_idx, v_sc = kv_encode(v, cb_v, variant)
+            upd3 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0))
+            upd2 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0))
+            k_cache = jax.vmap(upd3)(cache["k"], slot, k_idx)
+            v_cache = jax.vmap(upd3)(cache["v"], slot, v_idx)
+            k_s = jax.vmap(upd2)(cache["k_s"], slot,
+                                 k_sc.astype(cache["k_s"].dtype))
+            v_s = jax.vmap(upd2)(cache["v_s"], slot,
+                                 v_sc.astype(cache["v_s"].dtype))
+            new_len = cache_len + 1
+            o = _kvq_decode_attention(q, k_cache, v_cache, k_s, v_s,
+                                      new_len, cb_k, cb_v, rc, window)
+            new_cache = {"k": k_cache, "v": v_cache, "k_s": k_s, "v_s": v_s,
+                         "len": new_len}
+        elif int8_cache:
             cdt = cache["k"].dtype
             kq, ks_ = _quantize_kv(k, cdt)
             vq_, vs_ = _quantize_kv(v, cdt)
@@ -595,7 +666,8 @@ def attention_fwd(
                 "paged cache reached attention_fwd outside decode/prefill")
         if "k_s" in cache:
             raise NotImplementedError(
-                "chunked prefill over int8 KV caches is not supported")
+                "chunked prefill over quantized (int8/KV-VQ) KV caches "
+                "is not supported")
         if B != 1:
             raise ValueError(
                 f"chunked-prefill continuation requires B == 1, got {B}")
@@ -716,27 +788,66 @@ def mla_fwd(
             blk = jnp.take_along_axis(bt, (slot // bs_blk)[:, None],
                                       axis=1)[:, 0]
             off = slot % bs_blk
-            lat_arena = cache["latent"].at[blk, off].set(
-                latent.astype(cache["latent"].dtype).reshape(B, r),
-                mode="drop")
             kr_arena = cache["k_rope"].at[blk, off].set(
                 k_rope.astype(cache["k_rope"].dtype).reshape(B, dr),
                 mode="drop")
-            lat_cache = _paged_view(lat_arena, bt)     # (B, Sc, r)
             kr_cache = _paged_view(kr_arena, bt)       # (B, Sc, dr)
-            new_cache = {"latent": lat_arena, "k_rope": kr_arena,
-                         "len": new_len, "block_table": bt}
+            if "latent_s" in cache:
+                # KV-VQ latent: encode against the (single-"head")
+                # latent codebook, scatter uint8 indices + scale, then
+                # dequantize the gathered view — the absorb/expand math
+                # below is layout-blind.
+                variant = (rc.kv_vq.variant if rc.kv_vq is not None
+                           else "outlier")
+                cb_lat = p["kv_cb"]["lat"]             # (1, R, E, vd)
+                idx, sc = kv_encode(latent[:, :, None, :], cb_lat, variant)
+                lat_arena = cache["latent"].at[blk, off].set(
+                    idx.reshape(B, -1), mode="drop")
+                ls_arena = cache["latent_s"].at[blk, off].set(
+                    sc.reshape(B, 1).astype(cache["latent_s"].dtype),
+                    mode="drop")
+                lat_cache = kv_decode(
+                    _paged_view(lat_arena, bt)[:, :, None, :],
+                    _paged_view(ls_arena, bt), cb_lat)[:, :, 0, :]
+                new_cache = {"latent": lat_arena, "latent_s": ls_arena,
+                             "k_rope": kr_arena, "len": new_len,
+                             "block_table": bt}
+            else:
+                lat_arena = cache["latent"].at[blk, off].set(
+                    latent.astype(cache["latent"].dtype).reshape(B, r),
+                    mode="drop")
+                lat_cache = _paged_view(lat_arena, bt)  # (B, Sc, r)
+                new_cache = {"latent": lat_arena, "k_rope": kr_arena,
+                             "len": new_len, "block_table": bt}
         else:
             Sc = cache["latent"].shape[1]
             slot = jnp.minimum(cache_len, Sc - 1)
-            lat_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
-                cache["latent"], slot, latent.astype(cache["latent"].dtype).reshape(B, 1, r)
+            upd = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0))
+            kr_cache = jax.vmap(upd)(
+                cache["k_rope"], slot,
+                k_rope.astype(cache["k_rope"].dtype).reshape(B, 1, dr)
             )
-            kr_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0)))(
-                cache["k_rope"], slot, k_rope.astype(cache["k_rope"].dtype).reshape(B, 1, dr)
-            )
-            new_cache = {"latent": lat_cache, "k_rope": kr_cache,
-                         "len": new_len}
+            if "latent_s" in cache:
+                variant = (rc.kv_vq.variant if rc.kv_vq is not None
+                           else "outlier")
+                cb_lat = p["kv_cb"]["lat"]
+                idx, sc = kv_encode(latent[:, :, None, :], cb_lat, variant)
+                lat_idx = jax.vmap(upd)(
+                    cache["latent"], slot, idx.reshape(B, 1, -1))
+                ls_cache = jax.vmap(upd)(
+                    cache["latent_s"], slot,
+                    sc.reshape(B, 1, 1).astype(cache["latent_s"].dtype))
+                lat_cache = kv_decode(
+                    lat_idx[:, :, None, :], ls_cache, cb_lat)[:, :, 0, :]
+                new_cache = {"latent": lat_idx, "latent_s": ls_cache,
+                             "k_rope": kr_cache, "len": new_len}
+            else:
+                lat_cache = jax.vmap(upd)(
+                    cache["latent"], slot,
+                    latent.astype(cache["latent"].dtype).reshape(B, 1, r)
+                )
+                new_cache = {"latent": lat_cache, "k_rope": kr_cache,
+                             "len": new_len}
         if rc.mla_absorb:
             # Weight-absorbed MLA (§Perf): attention runs in the latent
             # space — wkv_b is folded into the query/output sides so the

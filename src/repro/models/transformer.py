@@ -187,19 +187,44 @@ def forward(
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
-               kv_int8: bool = False, kv_int4: bool = False) -> Any:
+               kv_int8: bool = False, kv_int4: bool = False,
+               kvq=None) -> Any:
     """Stacked decode caches. SWA archs get a ring buffer of window size;
     kv_int8/int4 store quantized values + per-(token, head) bf16 scales
-    (§Perf)."""
+    (§Perf). ``kvq`` (a core.vq.KVQuantConfig) selects the vector-
+    quantized layout instead: uint8 codebook indices (R*G per head) +
+    the same per-(token, head) bf16 scale leaves — 4-bit or 2-bit KV
+    riding the int8 ``k_s``/``v_s`` plumbing (codebooks live in params,
+    see core/quantize.attach_kv_codebooks)."""
     dtype = dtype or cfg.act_dtype
     S = max_len if cfg.sliding_window == 0 else min(max_len, cfg.sliding_window)
     n_scan = cfg.num_layers - cfg.first_dense_layers
+    if kvq is not None and (kv_int8 or kv_int4):
+        raise ValueError("kvq is mutually exclusive with kv_int8/kv_int4")
 
     def one_layer(_):
         if cfg.use_mla:
+            if kvq is not None:
+                return {
+                    "latent": jnp.zeros(
+                        (batch, S, kvq.idx_width(cfg.kv_lora_rank)),
+                        jnp.uint8),
+                    "latent_s": jnp.zeros((batch, S, 1), jnp.bfloat16),
+                    "k_rope": jnp.zeros((batch, S, cfg.qk_rope_dim), dtype),
+                    "len": jnp.zeros((batch,), jnp.int32),
+                }
             return {
                 "latent": jnp.zeros((batch, S, cfg.kv_lora_rank), dtype),
                 "k_rope": jnp.zeros((batch, S, cfg.qk_rope_dim), dtype),
+                "len": jnp.zeros((batch,), jnp.int32),
+            }
+        if kvq is not None:
+            w = kvq.idx_width(cfg.head_dim)
+            return {
+                "k": jnp.zeros((batch, S, cfg.num_kv_heads, w), jnp.uint8),
+                "v": jnp.zeros((batch, S, cfg.num_kv_heads, w), jnp.uint8),
+                "k_s": jnp.zeros((batch, S, cfg.num_kv_heads), jnp.bfloat16),
+                "v_s": jnp.zeros((batch, S, cfg.num_kv_heads), jnp.bfloat16),
                 "len": jnp.zeros((batch,), jnp.int32),
             }
         if kv_int8 or kv_int4:

@@ -1,3 +1,6 @@
+"""Request-level serving package: engine, typed API, paged KV memory,
+scheduling, metrics and resilience (see docs/ARCHITECTURE.md section 2 for the
+request lifecycle)."""
 from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
                              SamplingParams, StreamEvent)
 from repro.serve.engine import Engine, EngineConfig

@@ -135,10 +135,13 @@ class GenerationRequest:
 
     @property
     def prompt_len(self) -> int:
+        """Number of prompt tokens (after int32 flatten)."""
         return int(self.prompt.shape[0])
 
     @property
     def stop_set(self) -> frozenset:
+        """Union of ``eos_ids`` and ``stop_token_ids`` (the per-slot
+        stop-token device array is built from this)."""
         return frozenset(self.eos_ids) | frozenset(self.stop_token_ids)
 
 
@@ -163,6 +166,7 @@ class StreamEvent:
 
     @property
     def done(self) -> bool:
+        """True for the terminal event of the request's stream."""
         return self.finish_reason is not None
 
 
@@ -191,10 +195,13 @@ class RequestOutput:
 
     @property
     def num_tokens(self) -> int:
+        """Generated-token count (stop token included when emitted)."""
         return len(self.tokens)
 
     @property
     def decode_tokens_per_s(self) -> float:
+        """Decode-phase throughput; 0.0 when the request never decoded
+        (single-token output or rejection)."""
         decode_tokens = max(len(self.tokens) - 1, 0)
         if decode_tokens == 0 or self.decode_s <= 0.0:
             return 0.0
@@ -223,7 +230,10 @@ def prefill_buckets(max_len: int, min_bucket: int = 8) -> Tuple[int, ...]:
 
 
 def bucket_for(prompt_len: int, buckets: Tuple[int, ...]) -> int:
-    """Smallest bucket holding ``prompt_len``."""
+    """Smallest bucket holding ``prompt_len``.
+
+    Raises: ValueError when it exceeds the largest bucket (admission
+    rejects such prompts before this is reached)."""
     for b in buckets:
         if prompt_len <= b:
             return b

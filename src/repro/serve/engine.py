@@ -54,7 +54,9 @@ from repro.serve import api
 from repro.serve import paging
 from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
                              SamplingParams, StreamEvent)
-from repro.serve.kvcache import cache_bytes, pad_prefill_cache
+from repro.serve.kvcache import (cache_bytes, encode_prefill_cache,
+                                 pad_prefill_cache,
+                                 quantize_prefill_cache_int8)
 from repro.serve.metrics import EngineMetrics
 from repro.serve.resilience import (CircuitBreaker, EngineSnapshot, FaultPlan,
                                     InjectedFault)
@@ -123,6 +125,13 @@ class EngineConfig:
     # disables. Only effective for paged + bucketed attention families
     # with window == 0 and no MLA (the continuation path's support set)
     prefill_chunk: Optional[int] = None
+    # ---- compressed KV (core/vq.py, serve/kvcache.py) ----
+    # bits per stored KV channel: 16 = fp, 8 = int8 k_s/v_s layout,
+    # 4/2 = KV-VQ (uint8 codebook indices; codebooks attach to params).
+    # Prefill caches are encoded EXPLICITLY before slot insertion;
+    # chunked prefill is gated off below 16 (the continuation path
+    # cannot append into quantized leaves)
+    kv_bits: int = 16
 
 
 class Engine:
@@ -137,13 +146,54 @@ class Engine:
         cfg = model.cfg
         self.window = cfg.sliding_window or cfg.local_window
         self.metrics_counters = EngineMetrics(num_slots=ecfg.num_slots)
+
+        # ---- compressed KV layout (EngineConfig.kv_bits) ----
+        if ecfg.kv_bits not in (16, 8, 4, 2):
+            raise ValueError(
+                f"kv_bits={ecfg.kv_bits} unsupported; expected 16/8/4/2")
+        self.kvq = None
+        self.kv_int8 = False
+        if ecfg.kv_bits != 16 and cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"kv_bits={ecfg.kv_bits} requires an attention-cache "
+                f"family (dense/moe), got {cfg.family!r}")
+        if ecfg.kv_bits == 8:
+            if getattr(cfg, "use_mla", False):
+                raise ValueError(
+                    "kv_bits=8 has no MLA latent layout; use 16 or the "
+                    "KV-VQ 4/2-bit modes")
+            self.kv_int8 = True
+        elif ecfg.kv_bits in (4, 2):
+            from repro.core.quantize import (attach_kv_codebooks,
+                                             kv_codebook_tree)
+            from repro.core.vq import KVQuantConfig
+
+            self.kvq = KVQuantConfig(kv_bits=ecfg.kv_bits)
+            try:  # keep calibrated codebooks when the caller attached them
+                self._kv_cb = kv_codebook_tree(params)
+            except ValueError:
+                params = attach_kv_codebooks(params, cfg, self.kvq)
+                self.params = params
+                self._kv_cb = kv_codebook_tree(params)
+            rc = rc.replace(kv_vq=self.kvq)
+            self.rc = rc
+        # only pass the quantized-cache kwargs when active: duck-typed
+        # model stubs (and pre-kvq signatures) need not accept them
+        self._cache_kw = {}
+        if self.kv_int8:
+            self._cache_kw["kv_int8"] = True
+        if self.kvq is not None:
+            self._cache_kw["kvq"] = self.kvq
+
         if ecfg.paged:
             self.paging: Optional[paging.PagingConfig] = \
                 paging.make_paging_config(
                     model, ecfg.num_slots, ecfg.max_len, window=self.window,
-                    block_size=ecfg.block_size, num_blocks=ecfg.num_blocks)
+                    block_size=ecfg.block_size, num_blocks=ecfg.num_blocks,
+                    **self._cache_kw)
             self.caches = paging.init_paged_cache(
-                model, ecfg.num_slots, ecfg.max_len, self.paging)
+                model, ecfg.num_slots, ecfg.max_len, self.paging,
+                **self._cache_kw)
             self.pool: Optional[paging.BlockPool] = \
                 paging.BlockPool(self.paging.num_blocks)
             # host-side source of truth: per-slot block rows + owned ids;
@@ -161,7 +211,7 @@ class Engine:
             self._owned = []
             self._tables_dirty = False
             self.caches = paging.init_contiguous_cache(
-                model, ecfg.num_slots, ecfg.max_len)
+                model, ecfg.num_slots, ecfg.max_len, **self._cache_kw)
             # contiguous allocation is worst-case and constant
             self.metrics_counters.kv_bytes_in_use = cache_bytes(self.caches)
             self.metrics_counters.peak_kv_bytes_in_use = \
@@ -211,7 +261,8 @@ class Engine:
         # cache and no MLA latent path (models/common.py gates the same)
         self._chunked = bool(
             ecfg.paged and ecfg.prefill_chunk and self._bucketed
-            and self.window == 0 and not getattr(cfg, "use_mla", False))
+            and self.window == 0 and not getattr(cfg, "use_mla", False)
+            and ecfg.kv_bits == 16)  # continuations can't append quantized
 
         # Pre-plan at the exact execution shapes. Decode always runs at
         # M = num_slots tokens in flight; bucketed prefill runs at exactly
@@ -344,6 +395,18 @@ class Engine:
             self._buffers.pop(old, None)
 
     # ------------------------------------------------------------- prefill
+    def _encode_cache(self, cache: Any) -> Any:
+        """Bridge an fp prefill cache into the engine's compressed KV
+        layout (kv_bits < 16) — the EXPLICIT quantization step before
+        slot insertion / block writes; ``_insert_slot``'s astype would
+        truncate rather than quantize. No-op at kv_bits=16. Runs inside
+        the jitted prefill step."""
+        if self.kvq is not None:
+            return encode_prefill_cache(cache, self._kv_cb, self.kvq)
+        if self.kv_int8:
+            return quantize_prefill_cache_int8(cache)
+        return cache
+
     def _prefill_impl(self, params, tokens, true_len, key, temperature,
                       top_k, top_p, greedy, poison, extras, *, rc):
         """Jitted per-request prefill: forward at the (bucket-)padded
@@ -367,6 +430,7 @@ class Engine:
         tok, new_key = api.sample_tokens(
             last, key[None], temperature[None], top_k[None], top_p[None],
             greedy[None])
+        cache = self._encode_cache(cache)
         cache = pad_prefill_cache(cache, self.ecfg.max_len,
                                   window=self.window, true_len=true_len)
         return tok[0], bad, new_key[0], cache
@@ -392,8 +456,8 @@ class Engine:
             last, key[None], temperature[None], top_k[None], top_p[None],
             greedy[None])
         caches = paging.write_prefill_into_blocks(
-            caches, fresh, slot, bt_row, true_len, self.paging,
-            window=self.window)
+            caches, self._encode_cache(fresh), slot, bt_row, true_len,
+            self.paging, window=self.window)
         return tok[0], bad, new_key[0], caches
 
     def _prefill_chunk_impl(self, params, caches, tokens, hist, true_len,

@@ -21,9 +21,14 @@ rings whenever ``window > capacity``.
 
 Conventions (see models/*.init_cache):
   {"k","v","len"}            attention cache, time axis -3 (ring iff window)
-  {"latent","k_rope","len"}  MLA cache, time axis -2
+  {"latent","k_rope","len"}  MLA cache, time axis -2 ("latent_s" rides
+                             along at -2 for KV-VQ caches)
   {"xk","xv","xlen"} / {"cross_k","cross_v","cross_len"}   static memories
   anything else              recurrent state, already fixed-size
+
+``encode_prefill_cache`` bridges fp prefill caches into the KV-VQ
+uint8-index layout (core/vq.py) before slot insertion — prefill always
+runs in fp; quantization is an explicit engine-side step.
 """
 from __future__ import annotations
 
@@ -31,6 +36,8 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.vq import kv_encode
 
 
 def _pad_time(x: jax.Array, axis: int, capacity: int) -> jax.Array:
@@ -124,6 +131,9 @@ def pad_prefill_cache(cache: Any, capacity: int, *, window: int = 0,
                                           node["latent"].ndim - 2, eff_cap)
                 out["k_rope"] = _pad_time(node["k_rope"],
                                           node["k_rope"].ndim - 2, eff_cap)
+                if "latent_s" in node:  # KV-VQ scale leaf: (.., S, 1)
+                    out["latent_s"] = _pad_time(
+                        node["latent_s"], node["latent_s"].ndim - 2, eff_cap)
                 if "len" in node:
                     out["len"] = fix_len(node["len"])
                 return out
@@ -131,6 +141,100 @@ def pad_prefill_cache(cache: Any, capacity: int, *, window: int = 0,
         return node
 
     return walk(cache)
+
+
+def quantize_prefill_cache_int8(cache: Any, *, int4: bool = False) -> Any:
+    """Quantize fp attention nodes of a prefill cache into the int8/int4
+    ``k``/``v`` + bf16 ``k_s``/``v_s`` layout (same per-(token, head)
+    symmetric-absmax rule as models/common._quantize_kv — decode appends
+    must round-trip identically).
+
+    Prefill always runs in fp; the engine calls this explicitly before
+    slot insertion (``_insert_slot``'s astype would truncate, not
+    quantize). MLA/recurrent nodes pass through unchanged.
+    """
+    qmax = 7.0 if int4 else 127.0
+    qdt = jnp.int4 if int4 else jnp.int8
+
+    def quant(x):
+        absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+        scale = jnp.maximum(absmax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -qmax, qmax).astype(qdt)
+        return q, scale.astype(jnp.bfloat16)
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and "len" in node \
+                    and jnp.issubdtype(node["k"].dtype, jnp.floating):
+                kq, ks = quant(node["k"])
+                vq, vs = quant(node["v"])
+                return {"k": kq, "v": vq, "k_s": ks, "v_s": vs,
+                        "len": node["len"]}
+            if "latent" in node:
+                return node
+            if "k" in node and "v" in node:
+                return node  # static cross memories stay fp
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache)
+
+
+def encode_prefill_cache(cache: Any, codebooks: Any, kvq) -> Any:
+    """Quantize an fp prefill cache into the KV-VQ uint8-index layout.
+
+    Prefill always runs in fp (models/common.py returns fp ``k``/``v``/
+    ``latent`` leaves); slot insertion merely ``astype``s, which would
+    silently truncate rather than vector-quantize. The engine therefore
+    calls this explicitly — inside the jitted prefill step, before
+    ``pad_prefill_cache`` / paged block writes.
+
+    Args:
+      cache: prefill cache tree ({"body": .., "pre": ..} of stacked
+        attention or MLA nodes with leading layer dim L).
+      codebooks: matching tree from core.quantize.kv_codebook_tree —
+        {"body": {"k": (L,Hk,R,E,vd), "v": ..}, ..} for GQA or
+        {"body": {"lat": (L,1,R,E,vd)}, ..} for MLA.
+      kvq: the frozen core.vq.KVQuantConfig (supplies the scale variant).
+
+    Returns:
+      The cache tree with attention/MLA nodes rewritten to uint8 index
+      leaves + bf16 scale leaves (same names init_cache allocates:
+      ``k``/``v``/``k_s``/``v_s``, or ``latent``/``latent_s``). Nodes
+      already uint8, and nodes without codebooks, pass through.
+
+    Raises:
+      KeyError: codebook tree is missing an entry ("k"/"v"/"lat") for a
+        cache node it claims to cover.
+    """
+    enc = lambda x, cb: kv_encode(x, cb, kvq.variant)  # noqa: E731
+
+    def walk(node, cbs):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and "len" in node:
+                if cbs is None or node["k"].dtype == jnp.uint8:
+                    return node
+                k_idx, k_s = jax.vmap(enc)(node["k"], cbs["k"])
+                v_idx, v_s = jax.vmap(enc)(node["v"], cbs["v"])
+                return {"k": k_idx, "v": v_idx,
+                        "k_s": k_s.astype(jnp.bfloat16),
+                        "v_s": v_s.astype(jnp.bfloat16),
+                        "len": node["len"]}
+            if "latent" in node and "k_rope" in node:
+                if cbs is None or node["latent"].dtype == jnp.uint8:
+                    return node
+                lat = node["latent"][..., None, :]      # (L,B,S,1,r)
+                idx, s = jax.vmap(enc)(lat, cbs["lat"])
+                out = dict(node)
+                out["latent"] = idx[..., 0, :]          # (L,B,S,R*G)
+                out["latent_s"] = s.astype(jnp.bfloat16)  # (L,B,S,1)
+                return out
+            return {k: walk(v, cbs.get(k) if isinstance(cbs, dict) else None)
+                    for k, v in node.items()}
+        return node
+
+    return walk(cache, codebooks)
 
 
 def cache_bytes(cache: Any) -> int:

@@ -26,8 +26,15 @@ vLLM-style alternative:
                         with the OOB-sentinel trick below.
 
 Pageable node kinds (same detection convention as kvcache.py):
-  {"k","v","len"[,"k_s","v_s"]}   attention (time axis -3; scales -2)
-  {"latent","k_rope","len"}       MLA latent cache (time axis -2)
+  {"k","v","len"[,"k_s","v_s"]}   attention (time axis -3; scales -2).
+                                  Covers fp, int8/int4 AND KV-VQ caches:
+                                  a vector-quantized cache stores uint8
+                                  codebook indices in "k"/"v" (trailing
+                                  dim R*G instead of head_dim) with the
+                                  same "k_s"/"v_s" scale leaves, so the
+                                  arena/table machinery is layout-blind.
+  {"latent","k_rope","len"[,"latent_s"]}  MLA latent cache (time -2;
+                                  "latent_s" is the KV-VQ scale leaf)
 Everything else (recurrent h/conv states, xLSTM states, whisper/vision
 cross-attention memories) is *pass-through*: fixed-size per-slot state
 kept at its contiguous ``(..., B, ...)`` shape.
@@ -66,7 +73,7 @@ from repro.serve.kvcache import _to_ring_dynamic
 # Leaf names making up a pageable attention node and their time axes
 # (negative, from the right — leaves carry leading scan/batch axes).
 _ATTN_TIME_AXES = {"k": -3, "v": -3, "k_s": -2, "v_s": -2}
-_MLA_TIME_AXES = {"latent": -2, "k_rope": -2}
+_MLA_TIME_AXES = {"latent": -2, "k_rope": -2, "latent_s": -2}
 
 
 def _is_attn_node(node: dict) -> bool:
@@ -112,6 +119,8 @@ class PagingConfig:
     sentinel: int          # = num_blocks; OOB id whose writes drop
 
     def blocks_for(self, n: int) -> int:
+        """Blocks needed for an ``n``-token sequence (ring-capped at
+        ``blocks_per_slot`` — see ``blocks_for_len``)."""
         return blocks_for_len(n, block_size=self.block_size,
                               page_len=self.page_len)
 
@@ -134,10 +143,12 @@ class BlockPool:
 
     @property
     def free_count(self) -> int:
+        """Blocks currently allocatable."""
         return len(self._free)
 
     @property
     def used_count(self) -> int:
+        """Blocks currently owned by slots."""
         return self.num_blocks - len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
@@ -152,6 +163,10 @@ class BlockPool:
         return out
 
     def free(self, blocks: Sequence[int]) -> None:
+        """Return block ids to the pool.
+
+        Raises: ValueError on an out-of-range id or a double free (both
+        indicate scheduler ownership bugs and must stay loud)."""
         for b in blocks:
             if not (0 <= b < self.num_blocks):
                 raise ValueError(f"block id {b} out of range "
@@ -162,9 +177,14 @@ class BlockPool:
             self._free_set.add(b)
 
     def state(self) -> Tuple[int, ...]:
+        """The exact free-list order for ``Engine.snapshot()``."""
         return tuple(self._free)
 
     def restore(self, free: Sequence[int]) -> None:
+        """Replace the free list with a ``state()`` snapshot, restoring
+        the exact allocation replay order.
+
+        Raises: ValueError on duplicate or out-of-range ids."""
         free = [int(b) for b in free]
         if len(set(free)) != len(free):
             raise ValueError("pool snapshot contains duplicate block ids")
@@ -179,14 +199,20 @@ def make_paging_config(model, num_slots: int, max_len: int, *,
                        window: int = 0, block_size: int = 16,
                        num_blocks: Optional[int] = None,
                        kv_int8: bool = False,
-                       kv_int4: bool = False) -> PagingConfig:
+                       kv_int4: bool = False,
+                       kvq=None) -> PagingConfig:
     """Derive the pool geometry for ``model`` at the given slot count.
 
     ``page_len`` mirrors what init_cache allocates per slot:
     ``min(max_len, window)`` for ring/SWA caches, else ``max_len``.
     ``num_blocks`` defaults to ``num_slots * blocks_per_slot`` — same
     worst-case capacity as the contiguous cache, but now *shared*, so
-    short requests free headroom for long ones."""
+    short requests free headroom for long ones.
+
+    ``kv_int8``/``kv_int4``/``kvq`` (a core.vq.KVQuantConfig) select the
+    compressed cache layouts; ``bytes_per_block`` is computed from the
+    resulting leaf specs, so the KV gauges and block budgets
+    automatically reflect the compressed (e.g. uint8-index) arenas."""
     page_len = min(max_len, window) if window else max_len
     bs = effective_block_size(block_size, page_len)
     W = page_len // bs
@@ -198,7 +224,7 @@ def make_paging_config(model, num_slots: int, max_len: int, *,
             f"(blocks_per_slot={W})")
 
     specs = model.cache_specs(num_slots, max_len,
-                              kv_int8=kv_int8, kv_int4=kv_int4)
+                              kv_int8=kv_int8, kv_int4=kv_int4, kvq=kvq)
     per_block = 0
 
     def walk(node):
@@ -246,13 +272,16 @@ def _arena_shape(shape: Tuple[int, ...], t: int, meta: PagingConfig
 
 def init_paged_cache(model, num_slots: int, max_len: int,
                      meta: PagingConfig, *, kv_int8: bool = False,
-                     kv_int4: bool = False) -> Any:
+                     kv_int4: bool = False, kvq=None) -> Any:
     """Build the paged decode cache: pageable nodes get shared arenas +
     a sentinel-filled ``block_table`` leaf, pass-through nodes keep
     their contiguous per-slot shapes (zero-initialized; prefill insert
-    overwrites the slot rows before anything reads them)."""
+    overwrites the slot rows before anything reads them). ``kvq``
+    selects the vector-quantized uint8-index layout (KV codebooks stay
+    in the param tree — arenas are zero-initialized and slot-sliced,
+    which would corrupt cache-resident codebooks)."""
     specs = model.cache_specs(num_slots, max_len,
-                              kv_int8=kv_int8, kv_int4=kv_int4)
+                              kv_int8=kv_int8, kv_int4=kv_int4, kvq=kvq)
 
     def page_node(node, axes):
         out = {}
@@ -288,12 +317,12 @@ def init_paged_cache(model, num_slots: int, max_len: int,
 
 def paged_cache_specs(model, num_slots: int, max_len: int,
                       meta: PagingConfig, *, kv_int8: bool = False,
-                      kv_int4: bool = False) -> Any:
+                      kv_int4: bool = False, kvq=None) -> Any:
     """Shape/dtype tree of the paged cache without allocating it (the
     lowered serve step — launch/steps.py — carries it as state)."""
     return jax.eval_shape(
         lambda: init_paged_cache(model, num_slots, max_len, meta,
-                                 kv_int8=kv_int8, kv_int4=kv_int4))
+                                 kv_int8=kv_int8, kv_int4=kv_int4, kvq=kvq))
 
 
 def is_paged(caches: Any) -> bool:
