@@ -47,6 +47,12 @@ SERVE_MODULES = ("serve",)
 SERVE_FIELDS = ("tokens", "tok_per_s", "requests",
                 "kv_bytes_in_use", "blocks_in_use", "blocks_free")
 
+# the speculative-decoding trace row additionally pins its headline
+# numbers so the multi-token-per-step trajectory is tracked across PRs
+SPEC_ROW = "serve/spec_decode_trace"
+SPEC_FIELDS = ("tokens_per_step", "acceptance_rate",
+               "drafted", "accepted")
+
 
 def _is_num(v: Any) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool)
@@ -106,6 +112,13 @@ def validate_rows(doc: Any) -> List[str]:
                     errors.append(
                         f"{where}: serve row needs non-negative "
                         f"derived.{f}, got {v!r}")
+            if name == SPEC_ROW:
+                for f in SPEC_FIELDS:
+                    v = derived.get(f)
+                    if not _is_num(v) or v < 0:
+                        errors.append(
+                            f"{where}: spec-decode row needs non-negative "
+                            f"derived.{f}, got {v!r}")
     return errors
 
 

@@ -111,6 +111,32 @@ def run(report):
            f"{_metrics_fields(mp, wall_p)};wall_us={wall_p*1e6:.0f};"
            f"events={len(events_p)}")
 
+    # speculative decoding (serve/speculative.py): a repetition-heavy
+    # workload (tiny vocab forces the greedy stream into cycles the
+    # self-drafter can learn) through a speculate_k engine. The row's
+    # headline numbers are schema-gated (schema.SPEC_FIELDS):
+    # tokens_per_step must sit above 1.0 — the multi-token win — and
+    # acceptance_rate explains how far above
+    cfg_s = dataclasses.replace(cfg, vocab_size=64)
+    model_s = build_model(cfg_s)
+    params_s = model_s.quantize(model_s.init(key), method="synthetic",
+                                key=key)
+    eng_s = Engine(model_s, params_s, rc,
+                   EngineConfig(num_slots=2, max_len=64, speculate_k=3))
+    reqs_s = [GenerationRequest(
+        prompt=rng.integers(0, cfg_s.vocab_size, n).astype(np.int32),
+        max_new_tokens=40) for n in (5, 7)]
+    ms, wall_s, events_s = _trace(eng_s, reqs_s)
+    report("serve/spec_decode_trace", wall_s * 1e6 / max(len(reqs_s), 1),
+           f"{_metrics_fields(ms, wall_s)};wall_us={wall_s*1e6:.0f};"
+           f"events={len(events_s)};speculate_k=3;"
+           f"tokens_per_step={ms['decode_tokens_per_step']:.3f};"
+           f"acceptance_rate={ms['draft_acceptance_rate']:.3f};"
+           f"drafted={ms['drafted_tokens']};"
+           f"accepted={ms['accepted_draft_tokens']};"
+           f"rejected_drafts={ms['rejected_draft_tokens']};"
+           f"extra_tokens={ms['extra_decode_tokens']}")
+
     # KV-VQ engine (kv_bits=4, paged): the same trace served over
     # vector-quantized uint8 index arenas (core/vq.py; README "KV-VQ
     # memory model"). The row's kv_bytes gauges report the COMPRESSED

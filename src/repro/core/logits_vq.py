@@ -1,0 +1,184 @@
+"""VQ-Logits: a vector-quantized LM head (arXiv:2505.10202 style).
+
+The dense output head is the single largest decode matmul: ``(M, D) @
+(D, V)`` with V the (padded) vocabulary. VQ-Logits replaces the V
+per-token output embeddings with a small codebook of ``Kc`` codeword
+embeddings plus a ``(V,)`` token→codeword assignment and a per-token
+scale: the implied dense head is
+
+    W[:, v] = scale[v] * codebook[:, assign[v]]
+
+so scoring factors into one small matmul against the codebook — ``(M, D)
+@ (D, Kc)`` — followed by a gather ("scatter to full logits") along the
+assignment. MACs drop from ``M*D*V`` to ``M*D*Kc`` with ``Kc << V``.
+
+The head is a param-tree node ``{"vql": VQLogitsHead}``, attached by
+``core.quantize.attach_vq_logits_head`` and consumed by
+``models.common.linear`` through the same ``core.plan`` dispatch as
+every other weight family: ``plan_node`` derives a ``kind="vq_logits"``
+spec and the two jnp formulations below compete on the cost model —
+gather-scoring (the point of the scheme) vs. expand-to-dense (the exact
+oracle, also used by parity tests).
+
+Constructors mirror ``core.vq``: ``synthetic_logits_vq`` draws a random
+head whose implied dense weight is exact by construction (for parity
+tests), ``fit_logits_vq`` compresses a trained dense head by k-means
+over its scale-normalized columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.core import plan as plan_mod
+from repro.core import vq as vq_mod
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class VQLogitsHead:
+    """Compressed LM head: ``W[:, v] = scale[v] * codebook[:, assign[v]]``.
+
+    codebook : (D, Kc) float — codeword output embeddings (columns)
+    assign   : (V,) int32    — token → codeword id
+    scale    : (V,) float32  — per-token magnitude (1.0 for synthetic)
+    """
+
+    codebook: jax.Array
+    assign: jax.Array
+    scale: jax.Array
+
+    @property
+    def D(self) -> int:
+        return int(self.codebook.shape[0])
+
+    @property
+    def Kc(self) -> int:
+        return int(self.codebook.shape[1])
+
+    @property
+    def V(self) -> int:
+        return int(self.assign.shape[0])
+
+    def tree_flatten(self):
+        return (self.codebook, self.assign, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def expand(head: VQLogitsHead) -> jax.Array:
+    """Materialize the implied dense head ``(D, V)`` — the exact oracle."""
+    w = jnp.take(head.codebook, head.assign, axis=1)
+    return w * head.scale[None, :].astype(w.dtype)
+
+
+def synthetic_logits_vq(key, d_model: int, vocab: int, kc: int,
+                        dtype=jnp.float32) -> VQLogitsHead:
+    """Random head whose implied dense weight is exact by construction:
+    parity tests compare a model using this head against the same model
+    with ``{"w": expand(head)}`` and demand bit-identical logits."""
+    k_cb, k_as = jax.random.split(key)
+    cb = (jax.random.normal(k_cb, (d_model, kc), jnp.float32)
+          / jnp.sqrt(jnp.float32(d_model))).astype(dtype)
+    assign = jax.random.randint(k_as, (vocab,), 0, kc, jnp.int32)
+    return VQLogitsHead(cb, assign, jnp.ones((vocab,), jnp.float32))
+
+
+def fit_logits_vq(key, w, kc: int, *, iters: int = 20) -> VQLogitsHead:
+    """Compress a trained dense head ``w (D, V)`` by k-means over its
+    scale-normalized columns. ``scale[v]`` is the column L2 norm, so the
+    clustered points live on (near) the unit sphere and the codebook
+    captures direction, not magnitude."""
+    w = jnp.asarray(w, jnp.float32)
+    d_model, vocab = w.shape
+    scale = jnp.linalg.norm(w, axis=0)
+    safe = jnp.maximum(scale, 1e-12)
+    points = (w / safe[None, :]).T                       # (V, D)
+    centroids, assign = vq_mod.kmeans(key, points, kc, iters=iters)
+    return VQLogitsHead(centroids.T, assign.astype(jnp.int32),
+                        scale.astype(jnp.float32))
+
+
+def vq_logits_spec(head: VQLogitsHead, *, M: int, x_dtype,
+                   out_dtype) -> plan_mod.LinearSpec:
+    """Spec for a VQ-Logits head site. Field mapping (cf.
+    ``kvq_attention_spec``): K=d_model, N=vocab, k=codebook size Kc."""
+    return plan_mod.LinearSpec(
+        M=int(M), K=head.D, N=head.V, kind="vq_logits",
+        x_dtype=jnp.dtype(x_dtype).name, out_dtype=jnp.dtype(out_dtype).name,
+        k=head.Kc,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner backends
+# ---------------------------------------------------------------------------
+
+
+def _plan_vql_gather(spec: plan_mod.LinearSpec,
+                     policy: plan_mod.PlanPolicy) -> plan_mod.MatmulPlan:
+    """Codebook-vocab scoring + gather: the VQ-Logits formulation."""
+    out_dt = jnp.dtype(spec.out_dtype)
+
+    def run(x, head: VQLogitsHead):
+        cb = head.codebook
+        if cb.dtype != x.dtype:
+            cb = cb.astype(x.dtype)
+        y = ops.fp_matmul(x, cb, out_dtype=out_dt)        # (..., Kc)
+        y = jnp.take(y, head.assign, axis=-1)             # (..., V)
+        return y * head.scale.astype(out_dt)
+
+    itemsize = jnp.dtype(spec.x_dtype).itemsize
+    cost = plan_mod.PlanCost(
+        macs=spec.M * spec.K * spec.k,
+        lookup_adds=spec.M * spec.N,
+        weight_bytes=spec.K * spec.k * itemsize + spec.N * 8,
+        intermediate_bytes=spec.M * spec.k * out_dt.itemsize,
+    )
+    return plan_mod.MatmulPlan("vql_gather_jnp", spec, policy, (), cost, run)
+
+
+def _plan_vql_dequant(spec: plan_mod.LinearSpec,
+                      policy: plan_mod.PlanPolicy) -> plan_mod.MatmulPlan:
+    """Expand-to-dense oracle: materialize the implied head, dense GEMM.
+    Never the cost winner at decode M, but competes in the same ranking
+    and anchors parity."""
+    out_dt = jnp.dtype(spec.out_dtype)
+
+    def run(x, head: VQLogitsHead):
+        w = expand(head)
+        if w.dtype != x.dtype:
+            w = w.astype(x.dtype)
+        return ops.fp_matmul(x, w, out_dtype=out_dt)
+
+    itemsize = jnp.dtype(spec.x_dtype).itemsize
+    cost = plan_mod.PlanCost(
+        macs=spec.M * spec.K * spec.N,
+        lookup_adds=spec.K * spec.N,
+        weight_bytes=spec.K * spec.k * itemsize + spec.N * 8,
+        intermediate_bytes=spec.K * spec.N * itemsize,
+    )
+    return plan_mod.MatmulPlan("vql_dequant_jnp", spec, policy, (), cost, run)
+
+
+def _register_backends() -> None:
+    plan_mod.register_backend(
+        "vql_gather_jnp",
+        lambda s, p: s.kind == "vq_logits",
+        _plan_vql_gather,
+    )
+    plan_mod.register_backend(
+        "vql_dequant_jnp",
+        lambda s, p: s.kind == "vq_logits",
+        _plan_vql_dequant,
+    )
+
+
+_register_backends()

@@ -69,7 +69,7 @@ from repro.core.vq import VQWeight
 
 log = logging.getLogger(__name__)
 
-WEIGHT_KINDS = ("dense", "int8", "vq", "kvq_attn")
+WEIGHT_KINDS = ("dense", "int8", "vq", "kvq_attn", "vq_logits")
 VQ_MODES = ("none", "eva", "dequant")
 IMPLS = ("jnp", "pallas")
 
@@ -687,7 +687,8 @@ def first_match_backend(spec: LinearSpec, policy: PlanPolicy
 
 def plan_node(p: Any, x, *, mode: str, policy: PlanPolicy,
               out_dtype=None) -> MatmulPlan:
-    """Plan one linear param node ({"w": ...} or {"vq": ...}) for input
+    """Plan one linear param node ({"w": ...}, {"vq": ...} or
+    {"vql": ...}) for input
     ``x`` under run ``mode``. This is the single dispatch point used by
     ``models.common.linear`` — the weight-kind decision lives in the spec
     derivation, the formulation choice in the backend registry."""
@@ -697,6 +698,12 @@ def plan_node(p: Any, x, *, mode: str, policy: PlanPolicy,
         spec = LinearSpec.for_vq(vq, M=x.size // vq.K, x_dtype=x.dtype,
                                  out_dtype=out_dtype)
         return _PLANNER.plan(spec, policy.resolve_vq_mode(mode))
+    if "vql" in p:
+        from repro.core import logits_vq as lvq  # local: lvq imports plan
+        head = p["vql"]
+        spec = lvq.vq_logits_spec(head, M=x.size // head.D, x_dtype=x.dtype,
+                                  out_dtype=out_dtype)
+        return _PLANNER.plan(spec, policy)
     w = p["w"]
     kind = "int8" if (mode == "prefill" and policy.int8_prefill) else "dense"
     spec = LinearSpec.for_dense(w, M=x.size // int(w.shape[-2]),
@@ -733,6 +740,12 @@ def preplan_params(params: Any, policy: PlanPolicy, *, mode: str, m: int,
             spec = LinearSpec.for_vq(vq, M=m, x_dtype=act_dtype,
                                      out_dtype=act_dtype, in_mesh=False)
             out.append((path, planner.plan(spec, policy.resolve_vq_mode(mode))))
+            return
+        if "vql" in node:
+            from repro.core import logits_vq as lvq
+            spec = lvq.vq_logits_spec(node["vql"], M=m, x_dtype=act_dtype,
+                                      out_dtype=jnp.float32)
+            out.append((path, planner.plan(spec, policy)))
             return
         if "w" in node and hasattr(node["w"], "ndim") and node["w"].ndim >= 2:
             kind = "int8" if (mode == "prefill" and policy.int8_prefill) \

@@ -381,6 +381,43 @@ def attach_kv_codebooks(params: Any, cfg: "ModelConfig", kvq: KVQuantConfig,
     return walk(params, (), None)
 
 
+def attach_vq_logits_head(params: Any, kc: int, *, key=None,
+                          iters: int = 20) -> Any:
+    """Replace the dense LM head with a VQ-Logits compressed head
+    (``core.logits_vq``): the ``{"w": (D, V)}`` node under ``lm_head``
+    becomes ``{"vql": VQLogitsHead}``, fitted by k-means over the head's
+    scale-normalized columns. Idempotent: an already-attached head is
+    re-fitted from its implied dense weight.
+
+    Raises:
+      ValueError: when params carry no separate ``lm_head`` node
+        (tied-embedding models score through the embedding table) or the
+        head is weight-VQ quantized (compress one family at a time).
+    """
+    from repro.core import logits_vq as lvq
+
+    if not (isinstance(params, dict)
+            and isinstance(params.get("lm_head"), dict)):
+        raise ValueError(
+            "attach_vq_logits_head: params have no lm_head node "
+            "(tie_embeddings models have no separate head to compress)")
+    node = params["lm_head"]
+    if "vql" in node:
+        w = lvq.expand(node["vql"])
+    elif "vq" in node:
+        raise ValueError(
+            "attach_vq_logits_head: lm_head is weight-VQ quantized; "
+            "attach the logits head before quantize_lm_head, not after")
+    else:
+        w = node["w"]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    head = lvq.fit_logits_vq(key, w, kc, iters=iters)
+    out = dict(params)
+    out["lm_head"] = {"vql": head}
+    return out
+
+
 def kv_codebook_tree(params: Any) -> Dict[str, Any]:
     """Collect attached ``kv_cb`` nodes keyed by cache subtree name
     ({"body": {...}, "pre": {...}}) — the layout

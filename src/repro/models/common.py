@@ -195,7 +195,13 @@ def linear(p: Params, x: jax.Array, rc: RunConfig, *, out_dtype=None) -> jax.Arr
     out_dtype = out_dtype or x.dtype
     pl = plan_mod.plan_node(p, x, mode=rc.mode, policy=rc.policy,
                             out_dtype=out_dtype)
-    y = pl.execute(x, p["vq"] if "vq" in p else p["w"])
+    if "vq" in p:
+        leaf = p["vq"]
+    elif "vql" in p:
+        leaf = p["vql"]
+    else:
+        leaf = p["w"]
+    y = pl.execute(x, leaf)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -374,7 +380,7 @@ def blocked_attention(
 
 
 def decode_attention(
-    q: jax.Array,          # (B, 1, H, hd)
+    q: jax.Array,          # (B, Sq, H, hd) — Sq > 1 for speculative verify
     k_cache: jax.Array,    # (B, S, Hk, hd)
     v_cache: jax.Array,    # (B, S, Hk, hd)
     cache_len: jax.Array,  # (B,) valid lengths (ring caches pass full S)
@@ -382,21 +388,30 @@ def decode_attention(
     window: int = 0,
     ring: bool = False,
 ) -> jax.Array:
-    """Single-token attention over a (possibly ring-buffered) KV cache."""
+    """Attention over a (possibly ring-buffered) KV cache.
+
+    ``cache_len`` counts entries INCLUDING the Sq queries just written:
+    query i sits at absolute position ``cache_len - Sq + i`` and only
+    attends entries at or before itself — at Sq == 1 this reduces to the
+    classic ``pos < cache_len`` single-token mask. Ring (SWA) caches are
+    single-token only."""
     B, S, Hk, hd = k_cache.shape
-    H = q.shape[2]
+    Sq = q.shape[1]
     scale = 1.0 / math.sqrt(hd)
-    s = _attn_chunk_scores(q, k_cache, scale)[:, :, 0]  # (B, H, S)
+    s = _attn_chunk_scores(q, k_cache, scale)           # (B, H, Sq, S)
     pos = jnp.arange(S)[None, :]                        # (1, S)
     if ring:
         # ring buffer: every slot written within the last `window` steps is
         # valid once cache_len >= window; before that only slots < cache_len
-        valid = pos < jnp.minimum(cache_len, S)[:, None]
+        if Sq != 1:
+            raise ValueError("ring caches decode one token at a time")
+        valid = (pos < jnp.minimum(cache_len, S)[:, None])[:, None, :]
     else:
-        valid = pos < cache_len[:, None]
-    s = jnp.where(valid[:, None, :], s, -1e30)
+        qpos = cache_len[:, None] - Sq + jnp.arange(Sq)[None, :]  # (B, Sq)
+        valid = pos[None] <= qpos[..., None]            # (B, Sq, S)
+    s = jnp.where(valid[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = _attn_chunk_apply(p[:, :, None, :], v_cache)    # (B,1,H,hd)
+    o = _attn_chunk_apply(p, v_cache)                   # (B,Sq,H,hd)
     return o.astype(q.dtype)
 
 
@@ -438,8 +453,10 @@ def _kvq_decode_attention(q, k_idx, v_idx, k_s, v_s, lengths, cb_k, cb_v,
     backend matching kind="kvq_attn" (the dequantize-jnp oracle and,
     under impl="pallas", the fused kernel) is cost-ranked and the
     cheapest executes. Ring/SWA caches skip the planner — ring validity
-    semantics live in decode_attention — and always dequantize."""
-    if window == 0:
+    semantics live in decode_attention — and always dequantize, as do
+    multi-query windows (speculative verify): the kvq_attn backends are
+    single-query formulations."""
+    if window == 0 and q.shape[1] == 1:
         B, S, Hk, idx_w = k_idx.shape
         H, hd = q.shape[2], q.shape[3]
         spec = plan_mod.kvq_attention_spec(
@@ -518,16 +535,23 @@ def attention_fwd(
         # sentinel rows (freed / mid-prefill slots) drop the write.
         bt = cache["block_table"]                      # (B, W)
         bs_blk = cache["k"].shape[1]
-        Spage = bt.shape[1] * bs_blk
+        W = bt.shape[1]
+        Spage = W * bs_blk
+        NB = cache["k"].shape[0]
         cache_len = cache["len"]                       # (B,)
-        slot = (cache_len % Spage) if window > 0 \
-            else jnp.minimum(cache_len, Spage - 1)
-        blk = jnp.take_along_axis(bt, (slot // bs_blk)[:, None],
-                                  axis=1)[:, 0]
+        # S > 1: speculative verify writes the whole draft window at
+        # absolute positions len..len+S-1; positions past the slot's
+        # capacity route to the sentinel and drop (they can never belong
+        # to an emitted token — the engine caps emission at `remaining`).
+        pos_w = cache_len[:, None] + jnp.arange(S, dtype=cache_len.dtype)
+        slot = (pos_w % Spage) if window > 0 else pos_w
+        blk = jnp.take_along_axis(bt, jnp.clip(slot // bs_blk, 0, W - 1),
+                                  axis=1)                # (B, S)
+        phys = jnp.where(slot < Spage, blk, NB)
         off = slot % bs_blk
-        new_len = cache_len + 1
+        new_len = cache_len + S
         if "k_s" in cache and cache["k"].dtype == jnp.uint8:
-            # KV-VQ paged decode: encode the new token against the
+            # KV-VQ paged decode: encode the new token(s) against the
             # params-resident codebooks (p["kv_cb"]), scatter uint8
             # indices + scales through the block table, attend natively
             # over the compressed arena view.
@@ -535,12 +559,12 @@ def attention_fwd(
             cb_k, cb_v = p["kv_cb"]["k"], p["kv_cb"]["v"]
             k_idx, k_sc = kv_encode(k, cb_k, variant)
             v_idx, v_sc = kv_encode(v, cb_v, variant)
-            k_arena = cache["k"].at[blk, off].set(k_idx[:, 0], mode="drop")
-            v_arena = cache["v"].at[blk, off].set(v_idx[:, 0], mode="drop")
-            ks_arena = cache["k_s"].at[blk, off].set(
-                k_sc[:, 0].astype(cache["k_s"].dtype), mode="drop")
-            vs_arena = cache["v_s"].at[blk, off].set(
-                v_sc[:, 0].astype(cache["v_s"].dtype), mode="drop")
+            k_arena = cache["k"].at[phys, off].set(k_idx, mode="drop")
+            v_arena = cache["v"].at[phys, off].set(v_idx, mode="drop")
+            ks_arena = cache["k_s"].at[phys, off].set(
+                k_sc.astype(cache["k_s"].dtype), mode="drop")
+            vs_arena = cache["v_s"].at[phys, off].set(
+                v_sc.astype(cache["v_s"].dtype), mode="drop")
             o = _kvq_decode_attention(
                 q, _paged_view(k_arena, bt), _paged_view(v_arena, bt),
                 _paged_view(ks_arena, bt), _paged_view(vs_arena, bt),
@@ -552,10 +576,10 @@ def attention_fwd(
             cdt = cache["k"].dtype
             kq, ks_ = _quantize_kv(k, cdt)
             vq_, vs_ = _quantize_kv(v, cdt)
-            k_arena = cache["k"].at[blk, off].set(kq[:, 0], mode="drop")
-            v_arena = cache["v"].at[blk, off].set(vq_[:, 0], mode="drop")
-            ks_arena = cache["k_s"].at[blk, off].set(ks_[:, 0], mode="drop")
-            vs_arena = cache["v_s"].at[blk, off].set(vs_[:, 0], mode="drop")
+            k_arena = cache["k"].at[phys, off].set(kq, mode="drop")
+            v_arena = cache["v"].at[phys, off].set(vq_, mode="drop")
+            ks_arena = cache["k_s"].at[phys, off].set(ks_, mode="drop")
+            vs_arena = cache["v_s"].at[phys, off].set(vs_, mode="drop")
             k_view = (_paged_view(k_arena, bt).astype(jnp.bfloat16)
                       * _paged_view(ks_arena, bt)[..., None].astype(jnp.bfloat16))
             v_view = (_paged_view(v_arena, bt).astype(jnp.bfloat16)
@@ -566,11 +590,11 @@ def attention_fwd(
                          "v_s": vs_arena, "len": new_len,
                          "block_table": bt}
         else:
-            k_arena = cache["k"].at[blk, off].set(
-                k[:, 0].astype(cache["k"].dtype), mode="drop")
-            v_arena = cache["v"].at[blk, off].set(
-                v[:, 0].astype(cache["v"].dtype), mode="drop")
-            if rc.policy.impl == "pallas" and window == 0:
+            k_arena = cache["k"].at[phys, off].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_arena = cache["v"].at[phys, off].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            if rc.policy.impl == "pallas" and window == 0 and S == 1:
                 from repro.kernels.flash_decode import flash_decode_paged
 
                 o = flash_decode_paged(q, k_arena, v_arena, bt, new_len,
@@ -583,29 +607,33 @@ def attention_fwd(
             new_cache = {"k": k_arena, "v": v_arena, "len": new_len,
                          "block_table": bt}
     elif rc.mode == "decode" and cache is not None and kv_source is None:
-        # write the new token into the (ring) cache
+        # write the new token(s) into the (ring) cache. Multi-token
+        # windows (speculative verify) scatter per position with
+        # mode="drop" — NEVER dynamic_update_slice, whose clamped start
+        # would shift the whole slab backward over committed entries
+        # when len + S exceeds capacity.
         Sc = cache["k"].shape[1]
         cache_len = cache["len"]                       # (B,)
-        slot = (cache_len % Sc) if window > 0 else jnp.minimum(cache_len, Sc - 1)
+        pos_w = cache_len[:, None] + jnp.arange(S, dtype=cache_len.dtype)
+        slot = (pos_w % Sc) if window > 0 else pos_w   # (B, S); OOB drops
+        b_iota = jnp.arange(B)[:, None]
         kvq_cache = "k_s" in cache and cache["k"].dtype == jnp.uint8
         int8_cache = "k_s" in cache and not kvq_cache  # §Perf: int8/int4 KV
         if kvq_cache:
-            # KV-VQ contiguous decode: encode the new token's K/V against
+            # KV-VQ contiguous decode: encode the new tokens' K/V against
             # the per-head codebooks, write uint8 indices + scales into
             # the (ring) cache, attend via the planned backend
             variant = rc.kv_vq.variant if rc.kv_vq is not None else "outlier"
             cb_k, cb_v = p["kv_cb"]["k"], p["kv_cb"]["v"]
             k_idx, k_sc = kv_encode(k, cb_k, variant)
             v_idx, v_sc = kv_encode(v, cb_v, variant)
-            upd3 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0))
-            upd2 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0))
-            k_cache = jax.vmap(upd3)(cache["k"], slot, k_idx)
-            v_cache = jax.vmap(upd3)(cache["v"], slot, v_idx)
-            k_s = jax.vmap(upd2)(cache["k_s"], slot,
-                                 k_sc.astype(cache["k_s"].dtype))
-            v_s = jax.vmap(upd2)(cache["v_s"], slot,
-                                 v_sc.astype(cache["v_s"].dtype))
-            new_len = cache_len + 1
+            k_cache = cache["k"].at[b_iota, slot].set(k_idx, mode="drop")
+            v_cache = cache["v"].at[b_iota, slot].set(v_idx, mode="drop")
+            k_s = cache["k_s"].at[b_iota, slot].set(
+                k_sc.astype(cache["k_s"].dtype), mode="drop")
+            v_s = cache["v_s"].at[b_iota, slot].set(
+                v_sc.astype(cache["v_s"].dtype), mode="drop")
+            new_len = cache_len + S
             o = _kvq_decode_attention(q, k_cache, v_cache, k_s, v_s,
                                       new_len, cb_k, cb_v, rc, window)
             new_cache = {"k": k_cache, "v": v_cache, "k_s": k_s, "v_s": v_s,
@@ -614,13 +642,11 @@ def attention_fwd(
             cdt = cache["k"].dtype
             kq, ks_ = _quantize_kv(k, cdt)
             vq_, vs_ = _quantize_kv(v, cdt)
-            upd3 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0))
-            upd2 = lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0))
-            k_cache = jax.vmap(upd3)(cache["k"], slot, kq)
-            v_cache = jax.vmap(upd3)(cache["v"], slot, vq_)
-            k_s = jax.vmap(upd2)(cache["k_s"], slot, ks_)
-            v_s = jax.vmap(upd2)(cache["v_s"], slot, vs_)
-            new_len = cache_len + 1
+            k_cache = cache["k"].at[b_iota, slot].set(kq, mode="drop")
+            v_cache = cache["v"].at[b_iota, slot].set(vq_, mode="drop")
+            k_s = cache["k_s"].at[b_iota, slot].set(ks_, mode="drop")
+            v_s = cache["v_s"].at[b_iota, slot].set(vs_, mode="drop")
+            new_len = cache_len + S
             o = decode_attention(
                 q,
                 k_cache.astype(jnp.bfloat16) * k_s[..., None].astype(jnp.bfloat16),
@@ -630,14 +656,12 @@ def attention_fwd(
             new_cache = {"k": k_cache, "v": v_cache, "k_s": k_s, "v_s": v_s,
                          "len": new_len}
         else:
-            k_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0)))(
-                cache["k"], slot, k.astype(cache["k"].dtype)
-            )
-            v_cache = jax.vmap(lambda c, s_, n: jax.lax.dynamic_update_slice(c, n, (s_, 0, 0)))(
-                cache["v"], slot, v.astype(cache["v"].dtype)
-            )
-            new_len = cache_len + 1
-            if rc.policy.impl == "pallas" and window == 0:
+            k_cache = cache["k"].at[b_iota, slot].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[b_iota, slot].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_len = cache_len + S
+            if rc.policy.impl == "pallas" and window == 0 and S == 1:
                 from repro.kernels.flash_decode import flash_decode
 
                 o = flash_decode(q, k_cache, v_cache, new_len,

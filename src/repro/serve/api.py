@@ -72,13 +72,19 @@ class SamplingParams:
     highest-probability tokens (0 disables) and the top_p nucleus (1.0
     disables), using a PRNG stream derived from ``seed`` — two requests
     with equal params and seed draw identical streams regardless of
-    submission order or slot placement."""
+    submission order or slot placement.
+
+    ``logprobs=True`` additionally surfaces the chosen token's
+    log-probability — ``log_softmax`` of the model's UNSCALED logits at
+    the emitted token, for greedy and sampled rows alike — on every
+    ``StreamEvent`` and on ``RequestOutput.logprobs``."""
 
     greedy: bool = True
     temperature: float = 1.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    logprobs: bool = False
 
     def __post_init__(self):
         if not self.greedy and self.temperature <= 0.0:
@@ -109,7 +115,14 @@ class GenerationRequest:
     wastes a prefill), between decode steps (a wedged request stops
     holding its slot and KV allocation) and while ``stream()``ing. None
     means no deadline (the engine's ``queue_ttl_s`` still bounds queue
-    wait)."""
+    wait).
+
+    ``speculate=False`` opts this request out of speculative decoding on
+    an engine running with ``speculate_k > 0``: its slot caps emission
+    at one token per step (pure data — the batch still shares the one
+    traced multi-token step). The stream is token-identical either
+    way; the opt-out only trades tokens/step for not attending over
+    draft garbage."""
 
     prompt: np.ndarray
     max_new_tokens: int = 16
@@ -117,6 +130,7 @@ class GenerationRequest:
     eos_ids: Tuple[int, ...] = ()
     stop_token_ids: Tuple[int, ...] = ()
     deadline_s: Optional[float] = None
+    speculate: bool = True
 
     def __post_init__(self):
         prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -157,12 +171,15 @@ class StreamEvent:
     A token event carries the emitted ``token`` and its 0-based ``index``
     in the generated stream; the terminal event of a request additionally
     sets ``finish_reason``. A rejected submission produces a single
-    tokenless terminal event (token=None, index=-1)."""
+    tokenless terminal event (token=None, index=-1). ``logprob`` is the
+    chosen-token log-probability when the request set
+    ``SamplingParams.logprobs`` (None otherwise)."""
 
     uid: int
     index: int
     token: Optional[int]
     finish_reason: Optional[str] = None
+    logprob: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -186,6 +203,9 @@ class RequestOutput:
     queue_wait_s: float = 0.0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # chosen-token logprobs, parallel to ``tokens``; empty unless the
+    # request set SamplingParams.logprobs
+    logprobs: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if self.finish_reason not in FINISH_REASONS:
@@ -314,6 +334,17 @@ def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
     sampled, new_keys = jax.vmap(one)(keys, masked)
     tok = jnp.where(greedy, greedy_tok, sampled)
     return tok, new_keys
+
+
+def token_logprobs(logits: jax.Array, tok: jax.Array) -> jax.Array:
+    """Per-row log-probability of ``tok`` under softmax of the UNSCALED
+    logits — the model's own distribution, not the temperature/top-k
+    shaped sampling distribution, so greedy and sampled rows report the
+    same quantity. logits (B, V), tok (B,) -> (B,) f32."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, tok[:, None], axis=-1)[:, 0]
+    return gold - logz
 
 
 def sample_and_stop(logits: jax.Array, *, keys: jax.Array,

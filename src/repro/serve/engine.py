@@ -52,6 +52,7 @@ from repro.models.common import RunConfig
 from repro.runtime.fault_tolerance import StepWatchdog
 from repro.serve import api
 from repro.serve import paging
+from repro.serve import speculative
 from repro.serve.api import (GenerationRequest, RequestEvicted, RequestOutput,
                              SamplingParams, StreamEvent)
 from repro.serve.kvcache import (cache_bytes, encode_prefill_cache,
@@ -132,6 +133,15 @@ class EngineConfig:
     # chunked prefill is gated off below 16 (the continuation path
     # cannot append into quantized leaves)
     kv_bits: int = 16
+    # ---- speculative decoding (serve/speculative.py) ----
+    # K > 0 turns every batched decode step into a K-draft verify
+    # window: up to K+1 tokens emit per slot per step, streams stay
+    # token-identical to K=0 (the acceptance rule replays the exact
+    # sampling epilogue). Requires window == 0, an attention family
+    # (dense/moe is how caches append; MoE capacity routing depends on
+    # the token count, so only dense keeps bit-identity) and no MLA.
+    # Per-request opt-out: GenerationRequest.speculate=False
+    speculate_k: int = 0
 
 
 class Engine:
@@ -231,6 +241,30 @@ class Engine:
         self.remaining = np.zeros((B,), np.int32)
         self.active = np.zeros((B,), bool)
 
+        # ---- speculative decoding state (EngineConfig.speculate_k) ----
+        self.spec_k = int(ecfg.speculate_k)
+        if self.spec_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {self.spec_k}")
+        if self.spec_k:
+            if self.window != 0:
+                raise ValueError(
+                    "speculate_k > 0 requires a full (non-windowed) cache: "
+                    "ring caches decode one token at a time")
+            if cfg.family != "dense":
+                raise ValueError(
+                    f"speculate_k > 0 requires family='dense' (MoE capacity "
+                    f"routing depends on the token count, breaking "
+                    f"token-identity), got {cfg.family!r}")
+            if getattr(cfg, "use_mla", False):
+                raise ValueError(
+                    "speculate_k > 0 is not supported with MLA decode")
+            # per-slot successor table (the self-drafting n-gram model)
+            # and opt-in mask — device args of the one traced decode
+            # step, and part of the snapshot slot state
+            self.succ = np.full((B, cfg.vocab_size), -1, np.int32)
+            self.spec_on = np.ones((B,), bool)
+            self._SLOT_STATE = Engine._SLOT_STATE + ("succ", "spec_on")
+
         # request-level bookkeeping; _retired drives FIFO eviction of
         # finished outputs/buffers past ecfg.max_retained
         self._outputs: Dict[int, RequestOutput] = {}
@@ -297,9 +331,7 @@ class Engine:
             for rk, count in sorted(rankings.items()):
                 log.info("%s ranking [%d leaves] %s", phase, count, rk)
 
-        self._decode_fn = jax.jit(
-            functools.partial(self._decode_impl, rc=rc.replace(mode="decode")),
-        )
+        self._decode_fn = self._make_decode_fn()
         self._prefill_fn = jax.jit(
             functools.partial(self._prefill_impl,
                               rc=self.rc.replace(mode="prefill")),
@@ -321,16 +353,23 @@ class Engine:
     def _admission_error(self, request: GenerationRequest) -> Optional[str]:
         """Why this request can never be served on this engine (None when
         servable). Windowed caches wrap by design, so only the prompt must
-        fit; full caches also need room for every decode write (positions
-        prompt_len .. prompt_len + max_new_tokens - 2) — past capacity the
-        write slot clamps and silently corrupts the newest KV entry."""
+        fit. Contiguous full caches also need room for every decode write
+        (positions prompt_len .. prompt_len + max_new_tokens - 2) — past
+        capacity the write would be dropped and the stream corrupted.
+        PAGED full caches admit length-aware instead: memory is bounded
+        by actual block consumption (free blocks at admission + growth /
+        preemption during decode), so ``max_new_tokens`` is treated as a
+        cap, not a reservation — the decode budget simply clamps to the
+        remaining capacity at activation (finish_reason="length")."""
         if request.prompt_len > self.ecfg.max_len:
             return (f"prompt length {request.prompt_len} exceeds max_len "
                     f"{self.ecfg.max_len}")
         need = request.prompt_len + request.max_new_tokens - 1
         if self.window == 0 and need > self.ecfg.max_len:
-            return (f"prompt_len + max_new_tokens - 1 = {need} exceeds the "
-                    f"cache capacity max_len={self.ecfg.max_len}")
+            if self.paging is None:
+                return (f"prompt_len + max_new_tokens - 1 = {need} exceeds "
+                        f"the cache capacity max_len={self.ecfg.max_len}")
+            need = self.ecfg.max_len  # paged: budget clamps at activation
         if self.paging is not None:
             peak = self.paging.blocks_for(need)
             if peak > self.paging.num_blocks:
@@ -430,10 +469,11 @@ class Engine:
         tok, new_key = api.sample_tokens(
             last, key[None], temperature[None], top_k[None], top_p[None],
             greedy[None])
+        lp = api.token_logprobs(last, tok)[0]
         cache = self._encode_cache(cache)
         cache = pad_prefill_cache(cache, self.ecfg.max_len,
                                   window=self.window, true_len=true_len)
-        return tok[0], bad, new_key[0], cache
+        return tok[0], bad, lp, new_key[0], cache
 
     def _paged_prefill_impl(self, params, caches, tokens, true_len, slot,
                             bt_row, key, temperature, top_k, top_p, greedy,
@@ -455,10 +495,11 @@ class Engine:
         tok, new_key = api.sample_tokens(
             last, key[None], temperature[None], top_k[None], top_p[None],
             greedy[None])
+        lp = api.token_logprobs(last, tok)[0]
         caches = paging.write_prefill_into_blocks(
             caches, self._encode_cache(fresh), slot, bt_row, true_len,
             self.paging, window=self.window)
-        return tok[0], bad, new_key[0], caches
+        return tok[0], bad, lp, new_key[0], caches
 
     def _prefill_chunk_impl(self, params, caches, tokens, hist, true_len,
                             slot, bt_row, key, temperature, top_k, top_p,
@@ -484,8 +525,9 @@ class Engine:
         tok, new_key = api.sample_tokens(
             last, key[None], temperature[None], top_k[None], top_p[None],
             greedy[None])
+        lp = api.token_logprobs(last, tok)[0]
         caches = paging.merge_slot(caches, new_view, slot)
-        return tok[0], bad, new_key[0], caches
+        return tok[0], bad, lp, new_key[0], caches
 
     def _prefill_target(self, tr: TrackedRequest) -> int:
         """Positions to prefill before ``slot`` can (re)join decode: the
@@ -554,15 +596,15 @@ class Engine:
         toks_dev = jnp.asarray(chunk[None], jnp.int32)
         true_c = jnp.asarray(c, jnp.int32)
         if self.paging is None:
-            tok, bad, new_key, cache = self._prefill_fn(
+            tok, bad, lp, new_key, cache = self._prefill_fn(
                 self.params, toks_dev, true_c, *sample_args)
         elif pos0 == 0:
-            tok, bad, new_key, new_caches = self._paged_prefill_fn(
+            tok, bad, lp, new_key, new_caches = self._paged_prefill_fn(
                 self.params, self.caches, toks_dev, true_c,
                 jnp.asarray(slot, jnp.int32), jnp.asarray(self.tables[slot]),
                 *sample_args)
         else:
-            tok, bad, new_key, new_caches = self._chunk_fn(
+            tok, bad, lp, new_key, new_caches = self._chunk_fn(
                 self.params, self.caches, toks_dev,
                 jnp.asarray(pos0, jnp.int32), true_c,
                 jnp.asarray(slot, jnp.int32), jnp.asarray(self.tables[slot]),
@@ -593,6 +635,11 @@ class Engine:
         self.stop_ids[slot, : len(stop)] = stop
         self.active[slot] = True
         self._tables_dirty = self.paging is not None
+        # paged full caches admit length-aware (_admission_error): the
+        # decode budget clamps to the capacity left past the prompt
+        budget = req.max_new_tokens
+        if self.paging is not None and self.window == 0:
+            budget = min(budget, self.ecfg.max_len - target + 1)
         if tr.preempted and tr.generated:
             # preemption resume: the re-sampled token is a duplicate of
             # history — restore the decode state saved at eviction so
@@ -601,12 +648,29 @@ class Engine:
             self.rng_keys[slot] = np.asarray(tr.resume_key)
             self.remaining[slot] = tr.resume_remaining
             tr.preempted = False
+            self._prime_spec(slot, tr)
             return None, False, True
         tr.generated.append(tok)
+        if sp.logprobs:
+            tr.logprobs.append(float(lp))
         self.last_token[slot] = tok
         self.rng_keys[slot] = np.asarray(new_key)
-        self.remaining[slot] = req.max_new_tokens - 1
+        self.remaining[slot] = budget - 1
+        self._prime_spec(slot, tr)
         return tok, False, True
+
+    def _prime_spec(self, slot: int, tr: TrackedRequest) -> None:
+        """(Re)prime the slot's speculative state at activation: the
+        opt-in flag and the successor table, seeded from the full token
+        history (prompt ++ generated — including the token prefill just
+        sampled, so the last-prompt-token transition is known)."""
+        if not self.spec_k:
+            return
+        self.spec_on[slot] = bool(tr.request.speculate)
+        speculative.prime_successors(
+            self.succ, slot,
+            np.concatenate([np.asarray(tr.request.prompt, np.int32),
+                            np.asarray(tr.generated, np.int32)]))
 
     # ------------------------------------------------------- paged KV blocks
     def _update_kv_gauges(self) -> None:
@@ -691,13 +755,20 @@ class Engine:
 
     def _grow_decode_blocks(self) -> None:
         """Before a batched decode step, make sure every active slot owns
-        blocks for the position it is about to write. An exhausted pool
-        preempts the youngest active request (possibly the one that
-        needs the block) until the write fits."""
+        blocks for the position(s) it is about to write — the next token
+        plus, when the slot speculates, its K draft positions (draft KV
+        past the slot's capacity drops harmlessly, so the lookahead caps
+        at max_len / the table width). An exhausted pool preempts the
+        youngest active request (possibly the one that needs the block)
+        until the write fits."""
         for b in np.nonzero(self.active)[0]:
             b = int(b)
+            k_ahead = self.spec_k if (self.spec_k and self.spec_on[b]) else 0
             while self.active[b]:
-                need = self.paging.blocks_for(int(self.positions[b]) + 1)
+                want = min(int(self.positions[b]) + 1 + k_ahead,
+                           self.ecfg.max_len)
+                need = min(self.paging.blocks_for(want),
+                           self.paging.blocks_per_slot)
                 short = need - len(self._owned[b])
                 if short <= 0 or self._alloc_blocks(b, short):
                     break
@@ -729,7 +800,32 @@ class Engine:
             logits, keys=keys, temperature=temperature, top_k=top_k,
             top_p=top_p, greedy=greedy, stop_ids=stop_ids,
             remaining=remaining, active=active)
-        return tok, done, bad, new_keys, new_caches
+        lp = api.token_logprobs(logits, tok)
+        return tok, done, bad, lp, new_keys, new_caches
+
+    def _spec_decode_impl(self, params, caches, tokens, positions, succ,
+                          keys, temperature, top_k, top_p, greedy, stop_ids,
+                          remaining, active, spec_on, poison, *, rc):
+        """Jitted SPECULATIVE batched decode step (speculate_k > 0):
+        serve/speculative.spec_decode_step — K drafts from the per-slot
+        successor tables verified in one model call, the acceptance rule
+        replaying the exact sample_and_stop math per logit row. Same
+        one-trace discipline as ``_decode_impl``: per-slot knobs, drafts
+        and acceptance counts are all data."""
+        self.trace_counts["decode"] += 1
+        return speculative.spec_decode_step(
+            self.model, params, caches, tokens, positions, succ, keys,
+            temperature, top_k, top_p, greedy, stop_ids, remaining, active,
+            spec_on, poison, rc=rc, k=self.spec_k)
+
+    def _make_decode_fn(self):
+        """Jit the batched decode step — the speculative multi-token body
+        or the classic single-token one, chosen ONCE at construction (and
+        at backend-quarantine re-jit); the step shape never flips
+        mid-serve."""
+        impl = self._spec_decode_impl if self.spec_k else self._decode_impl
+        return jax.jit(
+            functools.partial(impl, rc=self.rc.replace(mode="decode")))
 
     def _prefill_step_events(self, slot: int,
                              events: List[StreamEvent]) -> bool:
@@ -769,14 +865,17 @@ class Engine:
             return False
         m.prefills += 1
         m.tokens_generated += 1
-        # stop-set token straight out of prefill / budget of one:
-        # retire before the request joins a decode batch at all
+        # stop-set token straight out of prefill / effective budget of
+        # one (max_new_tokens == 1, or a paged length-aware admission
+        # whose clamped budget leaves no decode room): retire before the
+        # request joins a decode batch at all
         reason = None
         if tok in tr.stop_set:
             reason = "stop"
-        elif tr.request.max_new_tokens == 1:
+        elif int(self.remaining[slot]) <= 0:
             reason = "length"
-        events.append(StreamEvent(tr.uid, 0, tok, reason))
+        lp = tr.logprobs[-1] if tr.request.sampling.logprobs else None
+        events.append(StreamEvent(tr.uid, 0, tok, reason, logprob=lp))
         if reason is not None:
             self._finish_slot(slot, reason)
         return False
@@ -802,6 +901,7 @@ class Engine:
             # streamed tokens — the terminal output must carry them
             self._outputs[tr.uid] = RequestOutput(
                 uid=tr.uid, tokens=tuple(tr.generated),
+                logprobs=tuple(tr.logprobs),
                 finish_reason="timeout", queue_wait_s=now - tr.submit_t)
             events.append(StreamEvent(tr.uid, -1, None, "timeout"))
             self._retain(tr.uid)
@@ -910,10 +1010,14 @@ class Engine:
                                      else np.inf)
             t0 = time.perf_counter()
             self.watchdog.start_step()
-            tok, done, bad, new_keys, self.caches = self._decode_fn(
+            dev_args = [
                 self.params, self.caches,
                 jnp.asarray(np.where(self.active, self.last_token, 0)),
                 jnp.asarray(np.where(self.active, self.positions, 0)),
+            ]
+            if self.spec_k:
+                dev_args.append(jnp.asarray(self.succ))
+            dev_args += [
                 jnp.asarray(self.rng_keys),
                 jnp.asarray(self.temperature),
                 jnp.asarray(self.top_k),
@@ -922,11 +1026,28 @@ class Engine:
                 jnp.asarray(self.stop_ids),
                 jnp.asarray(self.remaining),
                 jnp.asarray(self.active),
-                jnp.asarray(poison),
-            )
-            tok = np.asarray(tok)
+            ]
+            if self.spec_k:
+                dev_args.append(jnp.asarray(self.spec_on))
+            dev_args.append(jnp.asarray(poison))
+            if self.spec_k:
+                (toks, lps, e_cnt, acc, done, bad, new_keys, new_succ,
+                 self.caches) = self._decode_fn(*dev_args)
+                toks = np.asarray(toks)                 # (B, K+1)
+                lps = np.asarray(lps)
+                e_cnt = np.asarray(e_cnt).astype(np.int32)
+                acc = np.asarray(acc)
+                self.succ = np.array(new_succ)
+            else:
+                tok, done, bad, lp, new_keys, self.caches = self._decode_fn(
+                    *dev_args)
+                toks = np.asarray(tok)[:, None]         # (B, 1)
+                lps = np.asarray(lp)[:, None]
+                acc = None
             done = np.asarray(done)
             bad = np.asarray(bad)
+            if not self.spec_k:
+                e_cnt = (self.active & ~bad).astype(np.int32)
             rep = self.watchdog.end_step()
             if rep.is_straggler:
                 m.straggler_steps += 1
@@ -939,19 +1060,32 @@ class Engine:
             # and the next prefill writes per-slot keys in place
             self.rng_keys = np.array(new_keys)
             n_bad = int(np.count_nonzero(bad))
+            n_emit = int(e_cnt.sum())
             m.decode_steps += 1
             m.decode_slot_steps += int(active_idx.size)
             m.decode_s += time.perf_counter() - t0
-            m.tokens_generated += int(active_idx.size) - n_bad
+            m.tokens_generated += n_emit
+            m.extra_decode_tokens += n_emit - (int(active_idx.size) - n_bad)
             m.poisoned_slot_steps += n_bad
+            if self.spec_k:
+                spec_lanes = self.active & ~bad & self.spec_on
+                n_spec = int(np.count_nonzero(spec_lanes))
+                n_acc = int(acc[spec_lanes].sum())
+                m.drafted_tokens += self.spec_k * n_spec
+                m.accepted_draft_tokens += n_acc
+                m.rejected_draft_tokens += self.spec_k * n_spec - n_acc
             any_poisoned = any_poisoned or n_bad > 0
 
             # only healthy lanes advance and emit; a poisoned lane's
-            # token never reaches its stream
-            emitted = self.active & ~bad
-            self.positions[emitted] += 1
-            self.remaining[emitted] -= 1
-            self.last_token = np.where(emitted, tok, self.last_token)
+            # token never reaches its stream. e_cnt is the per-lane
+            # emission count (always 1 for non-speculative steps, up to
+            # K+1 for accepted draft windows) — already zero for
+            # inactive/bad lanes
+            self.positions += e_cnt
+            self.remaining -= e_cnt
+            last_idx = np.maximum(e_cnt - 1, 0)
+            new_last = toks[np.arange(toks.shape[0]), last_idx]
+            self.last_token = np.where(e_cnt > 0, new_last, self.last_token)
             for b in active_idx:
                 tr = self.sched.slots[b]
                 if bad[b]:
@@ -959,13 +1093,25 @@ class Engine:
                                               None, "error"))
                     self._finish_slot(int(b), "error")
                     continue
-                t = int(tok[b])
-                tr.generated.append(t)
-                idx = len(tr.generated) - 1
+                n = int(e_cnt[b])
+                if n == 0:  # pragma: no cover - defensive
+                    continue
+                want_lp = tr.request.sampling.logprobs
                 reason = None
                 if done[b]:
-                    reason = "stop" if t in tr.stop_set else "length"
-                events.append(StreamEvent(tr.uid, idx, t, reason))
+                    last_t = int(toks[b, n - 1])
+                    reason = "stop" if last_t in tr.stop_set else "length"
+                base = len(tr.generated)
+                for j in range(n):
+                    t = int(toks[b, j])
+                    tr.generated.append(t)
+                    lpj = None
+                    if want_lp:
+                        lpj = float(lps[b, j])
+                        tr.logprobs.append(lpj)
+                    events.append(StreamEvent(
+                        tr.uid, base + j, t,
+                        reason if j == n - 1 else None, logprob=lpj))
                 if reason is not None:
                     self._finish_slot(int(b), reason)
 
@@ -1010,9 +1156,7 @@ class Engine:
         self.metrics_counters.backend_fallbacks += 1
         log.warning("backend %r failed and was quarantined; re-planning "
                     "decode/prefill on the remaining candidates", name)
-        self._decode_fn = jax.jit(
-            functools.partial(self._decode_impl,
-                              rc=self.rc.replace(mode="decode")))
+        self._decode_fn = self._make_decode_fn()
         self._prefill_fn = jax.jit(
             functools.partial(self._prefill_impl,
                               rc=self.rc.replace(mode="prefill")))
@@ -1041,7 +1185,8 @@ class Engine:
         decode_s = (time.perf_counter() - tr.decode_t0
                     if len(tr.generated) > 1 else 0.0)
         self._outputs[tr.uid] = RequestOutput(
-            uid=tr.uid, tokens=tuple(tr.generated), finish_reason=reason,
+            uid=tr.uid, tokens=tuple(tr.generated),
+            logprobs=tuple(tr.logprobs), finish_reason=reason,
             queue_wait_s=tr.queue_wait_s, prefill_s=tr.prefill_s,
             decode_s=decode_s)
         self._retain(tr.uid)

@@ -7,7 +7,13 @@ plain dict safe to log, JSON-serialize or emit as bench rows. The
 invariants tests pin:
 
   tokens_generated == prefills + decode_slot_steps - poisoned_slot_steps
+                      + extra_decode_tokens
                    == number of token-bearing StreamEvents
+
+(``extra_decode_tokens`` is zero on non-speculative engines, so the
+classic one-token-per-slot-step identity still holds there; on
+speculative engines it counts the tokens emitted beyond the first in
+each accepted draft window.)
   finished         == finished_stop + finished_length + errors + timeouts
   submitted        == admitted + rejected + still queued/running
 
@@ -50,6 +56,11 @@ class EngineMetrics:
     decode_slot_steps: int = 0       # active lanes summed over decode steps
     poisoned_slot_steps: int = 0     # lanes whose logits failed the finite check
     tokens_generated: int = 0
+    # ---- speculative decoding (all zero when speculate_k == 0) ----
+    drafted_tokens: int = 0          # K per speculating lane per decode step
+    accepted_draft_tokens: int = 0   # drafts that matched the verify sample
+    rejected_draft_tokens: int = 0   # drafted - accepted
+    extra_decode_tokens: int = 0     # emissions beyond 1 per lane per step
     backend_fallbacks: int = 0       # planned-backend failures recovered by re-rank
     snapshots: int = 0
     restores: int = 0
@@ -84,6 +95,22 @@ class EngineMetrics:
         return self.decode_slot_steps / (self.decode_steps * self.num_slots)
 
     @property
+    def draft_acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify pass accepted."""
+        if self.drafted_tokens == 0:
+            return 0.0
+        return self.accepted_draft_tokens / self.drafted_tokens
+
+    @property
+    def decode_tokens_per_step(self) -> float:
+        """Mean tokens emitted per active lane per decode step — 1.0
+        without speculation, up to K+1 with it."""
+        useful = self.decode_slot_steps - self.poisoned_slot_steps
+        if useful <= 0:
+            return 0.0
+        return (useful + self.extra_decode_tokens) / useful
+
+    @property
     def decode_tokens_per_s(self) -> float:
         if self.decode_s <= 0.0:
             return 0.0
@@ -110,6 +137,8 @@ class EngineMetrics:
         out = self.state()
         out["uptime_s"] = time.perf_counter() - self.started_at
         out["slot_occupancy"] = self.slot_occupancy
+        out["draft_acceptance_rate"] = self.draft_acceptance_rate
+        out["decode_tokens_per_step"] = self.decode_tokens_per_step
         out["decode_tokens_per_s"] = self.decode_tokens_per_s
         out["tokens_per_s"] = self.tokens_per_s
         return out

@@ -33,6 +33,9 @@ class TrackedRequest:
     uid: int
     request: GenerationRequest
     generated: List[int] = dataclasses.field(default_factory=list)
+    # per-token logprobs of ``generated``; populated only when the
+    # request's SamplingParams.logprobs flag is set
+    logprobs: List[float] = dataclasses.field(default_factory=list)
     submit_t: float = dataclasses.field(default_factory=time.perf_counter)
     queue_wait_s: float = 0.0
     prefill_s: float = 0.0
@@ -74,7 +77,8 @@ class TrackedRequest:
         """Snapshot copy: shares the frozen GenerationRequest, copies the
         mutable generated list — a live engine mutating this record can
         never corrupt an EngineSnapshot that holds the clone."""
-        return dataclasses.replace(self, generated=list(self.generated))
+        return dataclasses.replace(self, generated=list(self.generated),
+                                   logprobs=list(self.logprobs))
 
 
 class Scheduler:

@@ -108,3 +108,32 @@ def test_validate_file_reports_unreadable(tmp_path):
     bad = tmp_path / "bad.json"
     bad.write_text("{")
     assert schema.validate_file(str(bad))
+
+
+def test_spec_decode_row_requires_headline_fields():
+    doc = copy.deepcopy(VALID)
+    row = {"module": "serve", "name": "serve/spec_decode_trace",
+           "us_per_call": 100.0,
+           "derived": {"tokens": 80, "tok_per_s": 10.0, "requests": 2,
+                       "kv_bytes_in_use": 0, "blocks_in_use": 0,
+                       "blocks_free": 0, "tokens_per_step": 1.5,
+                       "acceptance_rate": 0.18, "drafted": 168,
+                       "accepted": 30}}
+    doc["rows"].append(row)
+    assert schema.validate_rows(doc) == []
+    for field in schema.SPEC_FIELDS:
+        broken = copy.deepcopy(doc)
+        del broken["rows"][-1]["derived"][field]
+        errs = schema.validate_rows(broken)
+        assert any(f"derived.{field}" in e for e in errs), field
+
+
+def test_other_serve_rows_exempt_from_spec_fields():
+    doc = copy.deepcopy(VALID)
+    doc["rows"].append(
+        {"module": "serve", "name": "serve/request_trace",
+         "us_per_call": 100.0,
+         "derived": {"tokens": 18, "tok_per_s": 10.0, "requests": 3,
+                     "kv_bytes_in_use": 0, "blocks_in_use": 0,
+                     "blocks_free": 0}})
+    assert schema.validate_rows(doc) == []

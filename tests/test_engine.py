@@ -516,3 +516,70 @@ def test_mixed_batch_poison_bystander_token_identity(setup):
     assert m["errors"] == 1 and m["poisoned_slot_steps"] == 1
     assert m["tokens_generated"] == (
         m["prefills"] + m["decode_slot_steps"] - m["poisoned_slot_steps"])
+
+
+def test_paged_admission_is_length_aware(setup):
+    """Paged + full-cache engines admit by block consumption, not the
+    worst-case ``prompt + max_new - 1 <= max_len`` reservation: a request
+    whose nominal budget exceeds max_len is admitted, decodes to the
+    capacity clamp and finishes with reason "length" — while the same
+    request on a contiguous engine is rejected outright."""
+    cfg, model, params, rc = setup
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    req = lambda: GenerationRequest(prompt=prompt, max_new_tokens=64)
+
+    contig = Engine(model, params, rc, EngineConfig(num_slots=1, max_len=32))
+    uid = contig.submit(req())  # 8 + 64 - 1 = 71 > 32: the old rule fires
+    assert contig.output(uid).finish_reason == "rejected"
+
+    paged = Engine(model, params, rc,
+                   EngineConfig(num_slots=1, max_len=32, paged=True,
+                                num_blocks=8, block_size=8))
+    uid = paged.submit(req())
+    steps = 0
+    while not paged.idle:
+        paged.step()
+        steps += 1
+        assert steps < 200
+    out = paged.output(uid)
+    assert out.finish_reason == "length"
+    # budget clamps to capacity: positions 8..31 leave room for 25 tokens
+    assert len(out.tokens) == 32 - len(prompt) + 1
+    ref = _greedy_reference(model, params, prompt, len(out.tokens), rc, 32)
+    assert list(out.tokens) == ref
+
+
+def test_paged_admission_still_rejects_oversized_prompt(setup):
+    cfg, model, params, rc = setup
+    paged = Engine(model, params, rc,
+                   EngineConfig(num_slots=1, max_len=32, paged=True,
+                                num_blocks=8, block_size=8))
+    uid = paged.submit(GenerationRequest(
+        prompt=np.zeros(40, np.int32), max_new_tokens=4))
+    assert paged.output(uid).finish_reason == "rejected"
+
+
+def test_logprobs_surface_in_events_and_output(setup):
+    """SamplingParams.logprobs attaches the chosen-token logprob to every
+    StreamEvent and the terminal RequestOutput; off by default."""
+    cfg, model, params, rc = setup
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
+    eng = Engine(model, params, rc, EngineConfig(num_slots=2, max_len=32))
+    u_on = eng.submit(GenerationRequest(
+        prompt=prompt, max_new_tokens=4,
+        sampling=SamplingParams(logprobs=True)))
+    u_off = eng.submit(GenerationRequest(prompt=prompt, max_new_tokens=4))
+    events = []
+    while not eng.idle:
+        events.extend(eng.step())
+    on = [e for e in events if e.uid == u_on and e.token is not None]
+    off = [e for e in events if e.uid == u_off and e.token is not None]
+    assert len(on) == 4 and all(e.logprob is not None for e in on)
+    # greedy picks the argmax: its logprob is the max, hence > log(1/V)
+    assert all(e.logprob > -np.log(cfg.vocab_size) for e in on)
+    assert all(e.logprob <= 0.0 for e in on)
+    assert all(e.logprob is None for e in off)
+    out = eng.output(u_on)
+    assert len(out.logprobs) == 4
+    np.testing.assert_allclose(out.logprobs, [e.logprob for e in on])
+    assert eng.output(u_off).logprobs == ()

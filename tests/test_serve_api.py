@@ -205,3 +205,53 @@ class TestSampleAndStop:
         np.testing.assert_array_equal(done, [False, False, False, False])
         # bystander lanes' tokens are unaffected by the poisoned row
         assert int(np.asarray(tok)[0]) == 5 and int(np.asarray(tok)[3]) == 5
+
+
+class TestSamplingEdges:
+    """Epilogue edge cases the speculative verify loop leans on: the
+    temperature floor's greedy degeneracy and exact key-stream
+    reproducibility when state is rebuilt from scratch."""
+
+    def test_temperature_to_zero_degenerates_to_greedy(self):
+        # SamplingParams rejects temperature=0.0 at the API boundary, but
+        # the in-jit math clamps at 1e-6 — a near-zero temperature must
+        # sharpen the categorical into the argmax, matching greedy lanes
+        rng = np.random.default_rng(7)
+        logits = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+        st = _state(4)
+        st["temperature"] = jnp.full((4,), 1e-6, jnp.float32)
+        tok, _ = sample_tokens(logits, **st)
+        st2 = _state(4)
+        st2["greedy"] = jnp.ones((4,), bool)
+        ref, _ = sample_tokens(logits, **st2)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref))
+
+    def test_seeded_stream_reproducible_across_restarts(self):
+        """Rebuilding the key state from the same seeds (a process
+        restart) replays the identical top-k/top-p token stream."""
+        rng = np.random.default_rng(8)
+        logit_seq = [jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
+                     for _ in range(6)]
+
+        def run():
+            st = _state(3)
+            st["top_k"] = jnp.full((3,), 5, jnp.int32)
+            st["top_p"] = jnp.full((3,), 0.9, jnp.float32)
+            st["temperature"] = jnp.full((3,), 1.1, jnp.float32)
+            out = []
+            for logits in logit_seq:
+                tok, st["keys"] = sample_tokens(logits, **st)
+                out.append(np.asarray(tok).tolist())
+            return out
+
+        assert run() == run()
+
+    def test_token_logprobs_are_log_softmax_at_token(self):
+        rng = np.random.default_rng(9)
+        logits = jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
+        tok = jnp.asarray([0, 5, 23], jnp.int32)
+        lp = np.asarray(api.token_logprobs(logits, tok))
+        ref = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+        np.testing.assert_allclose(
+            lp, ref[np.arange(3), np.asarray(tok)], rtol=1e-6)
+        assert (lp <= 0.0).all()
